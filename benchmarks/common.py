@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: timing helper + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall microseconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float | None, derived: str) -> None:
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    print(f"{name},{us},{derived}", flush=True)

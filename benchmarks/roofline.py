@@ -1,0 +1,86 @@
+"""§Roofline report — reads results/dryrun.json, prints the full table.
+
+One row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs utilization, memory footprint. This is
+the artifact EXPERIMENTS.md §Roofline embeds; the §Perf hillclimb reads
+the same numbers before/after each change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skip":
+        return (f"{r['arch']},{r['shape']},{r['mesh']},SKIP,,,,,,,"
+                f"\"{r['reason'][:60]}\"")
+    if r["status"] == "fail":
+        return f"{r['arch']},{r['shape']},{r['mesh']},FAIL,,,,,,,"
+    t = r["roofline"]
+    mem_gb = r["memory"]["total_bytes"] / 2**30
+    return (f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+            f"{t['compute_s']:.3e},{t['memory_s']:.3e},"
+            f"{t['collective_s']:.3e},{t['dominant']},"
+            f"{t['useful_flops_ratio']:.3f},{t['roofline_fraction']:.3f},"
+            f"{mem_gb:.2f}")
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="all",
+                    help="single_pod_16x16 | multi_pod_2x16x16 | all")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.results):
+        print(f"# no dry-run results at {args.results}; run "
+              f"`python -m repro.launch.dryrun` first")
+        return []
+    recs = json.load(open(args.results))
+    if args.mesh != "all":
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+          "dominant,useful_flops_ratio,roofline_fraction,mem_gib_per_dev")
+    for r in recs:
+        print(fmt_row(r))
+
+    ok = [r for r in recs if r["status"] == "ok"]
+    from collections import Counter
+    doms = Counter(r["roofline"]["dominant"] for r in ok)
+    print(f"# {len(ok)} ok cells; dominant terms: {dict(doms)}")
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    print("# worst roofline fractions: "
+          + "; ".join(f"{r['arch']}/{r['shape']}/{r['mesh'].split('_')[0]}"
+                      f"={r['roofline']['roofline_fraction']:.3f}"
+                      for r in worst))
+
+    # §Perf variants: paper-faithful baseline vs optimized, side by side
+    vpath = os.path.join(os.path.dirname(args.results),
+                         "dryrun_variants.json")
+    if os.path.exists(vpath):
+        base = {(r["arch"], r["shape"], r["mesh"]): r for r in recs
+                if r["status"] == "ok"}
+        print("\n# §Perf variants (baseline -> optimized)")
+        print("arch,shape,mesh,variant,bound_before_s,bound_after_s,"
+              "delta_pct,gib_before,gib_after")
+        for r in json.load(open(vpath)):
+            key = (r["arch"], r["shape"], r["mesh"])
+            if r["status"] != "ok" or key not in base:
+                continue
+            b = base[key]
+            b0 = b["roofline"]["bound_s"]
+            b1 = r["roofline"]["bound_s"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{r['variant']},"
+                  f"{b0:.3e},{b1:.3e},{100 * (b1 - b0) / b0:+.1f}%,"
+                  f"{b['memory']['total_bytes'] / 2**30:.1f},"
+                  f"{r['memory']['total_bytes'] / 2**30:.1f}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

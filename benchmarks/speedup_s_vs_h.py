@@ -1,0 +1,62 @@
+"""Paper §VII-B — Cerebra-S vs Cerebra-H speedup on the same workload.
+
+The paper reports f_max 10.17 MHz (S) -> 96.24 MHz (H), a 9.46x clock
+improvement, PLUS the architectural cycle reduction from parallel cluster
+groups + hierarchical NoC. We run the same logical network through both
+cycle-accurate cost models and report cycles/timestep and wall time at the
+synthesized clocks — the total speedup = clock x cycle gain.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cerebra_h, cerebra_s, coding, timing
+from repro.core.lif import LIFParams
+from repro.data import mnist
+from repro.snn.model import SNNModelConfig, init_params, to_snnetwork
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = SNNModelConfig(layer_sizes=(784, args.hidden, 10),
+                         params=LIFParams(decay_rate=0.25))
+    params = init_params(jax.random.key(0), cfg)
+    net = to_snnetwork(params, cfg)
+
+    x, _ = mnist.load_or_generate("test", args.batch, seed=0)
+    spikes = coding.poisson_encode(jax.random.key(1), x, args.steps,
+                                   dtype=np.int32)
+
+    outS = cerebra_s.run(cerebra_s.compile_network(net), spikes)
+    outH = cerebra_h.run(cerebra_h.compile_network(net), spikes)
+    # per-image mean cycles per timestep
+    cyc_s = np.asarray(outS["cycles"], np.float64).mean()
+    cyc_h = np.asarray(outH["cycles"], np.float64).mean()
+    rep = timing.speedup_report(np.asarray(outS["cycles"]).mean(axis=1),
+                                np.asarray(outH["cycles"]).mean(axis=1))
+
+    emit("speedup/cycles_per_step_S", None, f"{cyc_s:.1f}")
+    emit("speedup/cycles_per_step_H", None, f"{cyc_h:.1f}")
+    emit("speedup/cycle_speedup", None, f"{rep.cycle_speedup:.2f}x")
+    emit("speedup/clock_speedup", None,
+         f"{rep.clock_speedup:.2f}x (paper: 9.46x)")
+    emit("speedup/total_speedup", None, f"{rep.total_speedup:.2f}x")
+    emit("speedup/time_per_inference_S_us", None,
+         f"{rep.time_s_us / 1.0:.1f}")
+    emit("speedup/time_per_inference_H_us", None,
+         f"{rep.time_h_us / 1.0:.1f}")
+    return {"report": rep}
+
+
+if __name__ == "__main__":
+    main()

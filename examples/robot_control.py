@@ -1,0 +1,89 @@
+"""Closed-loop neuromorphic control — the paper's target use case.
+
+The paper motivates SNAP-V with 20-40-neuron control networks (event-based
+PID for quadrotors [17], lane keeping [16], NeuroPod locomotion [2]). This
+example builds a ~36-neuron spiking PID-style controller, deploys it on
+the Cerebra-H model, and runs a closed perception->action loop against a
+simulated first-order plant: sensor error -> hardware rate encoder ->
+accelerator -> hardware decoder -> actuator command.
+
+The controller is hand-wired (no training): two antagonistic populations
+("too high" / "too low") whose firing rates drive the actuator — the
+standard neuromorphic PID construction of Stagsted et al. [17].
+
+    PYTHONPATH=src python examples/robot_control.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import coding
+from repro.core.lif import LIFParams
+from repro.core.network import SNNetwork
+from repro.core.session import AcceleratorSession
+
+
+def build_controller(n_per_pop: int = 12, gain: float = 0.9) -> SNNetwork:
+    """36-neuron spiking P-controller.
+
+    Inputs (2): error+ (setpoint above state), error- (below).
+    Populations: E+ (n), E- (n), and an antagonist-inhibition layer (n)
+    that sharpens the response. Outputs: the E+/E- populations; actuator
+    command = (rate(E+) - rate(E-)) * u_max.
+    """
+    n = n_per_pop
+    N = 3 * n
+    W = np.zeros((2 + N, N), np.float32)
+    # error+ excites E+ (slots 0:n); error- excites E- (slots n:2n)
+    W[0, 0:n] = gain
+    W[1, n:2 * n] = gain
+    # E+ excites the inhibition pool (2n:3n); pool inhibits E-
+    W[2 + np.arange(0, n), 2 * n + np.arange(n)] = 0.5
+    W[2 + 2 * n + np.arange(n), n + np.arange(n)] = -0.4
+    # subtract reset + slow leak: the membrane integrates its input rate,
+    # so output rate tracks input intensity almost linearly (the firing-
+    # rate P-term of Stagsted et al.)
+    return SNNetwork(
+        n_inputs=2, n_neurons=N, weights=W,
+        params=LIFParams(decay_rate=0.125, threshold=0.8,
+                         reset_mode="subtract"),
+        output_slice=(0, 2 * n),
+    )
+
+
+def main() -> None:
+    net = build_controller()
+    sess = AcceleratorSession()
+    sess.deploy("pid", net)
+    print(f"[control] deployed {net.n_neurons}-neuron controller "
+          f"({sess.utilization()['clusters_used']} clusters, "
+          f"{100 * sess.utilization()['neuron_utilization']:.1f}% of the "
+          f"1024-neuron array — the paper's under-utilization story)")
+
+    # integrator plant (position control): x' = 0.8 u, setpoint 0.7
+    x, setpoint, dt = 0.0, 0.7, 1.0
+    u_max, err_scale, T = 0.25, 0.5, 24
+    key = jax.random.key(0)
+    n = net.output_slice[1] // 2
+    print(f"{'t':>3} {'state':>8} {'error':>8} {'u':>8}")
+    for t in range(30):
+        err = setpoint - x
+        sensor = np.asarray(
+            [[max(err, 0.0) / err_scale, max(-err, 0.0) / err_scale]],
+            np.float32)
+        key, k = jax.random.split(key)
+        out = sess.run("pid", np.clip(sensor, 0, 1), T, k)
+        counts = np.asarray(out["output_counts"])[0]
+        rate_pos = counts[:n].mean() / T
+        rate_neg = counts[n:2 * n].mean() / T
+        u = float(u_max * (rate_pos - rate_neg))
+        x = x + dt * 0.8 * u
+        if t % 3 == 0:
+            print(f"{t:>3} {x:>8.3f} {err:>8.3f} {u:>8.3f}")
+    assert abs(setpoint - x) < 0.15, "controller failed to converge"
+    print(f"[control] settled at x={x:.3f} (setpoint {setpoint}) — "
+          f"closed loop through encoder -> Cerebra-H -> decoder")
+
+
+if __name__ == "__main__":
+    main()

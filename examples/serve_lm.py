@@ -1,0 +1,15 @@
+"""Serve a small LM with batched requests through the serving runtime.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch granite-3-2b]
+
+Uses the REDUCED config on CPU; the identical step function lowers for
+the production mesh in the decode_32k / long_500k dry-run cells.
+"""
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:],
+        env={**__import__("os").environ, "PYTHONPATH": "src"}))

@@ -1,0 +1,43 @@
+"""End-to-end driver: the paper's Table IV experiment grid.
+
+Default: one width sweep (5 experiments, CPU-minutes). ``--grid`` runs the
+paper's full 80-experiment grid (5 widths x 4 train-T x 4 infer-T) — hours
+on CPU, exactly the benchmark table. Results stream to CSV.
+
+    PYTHONPATH=src python examples/train_mnist_snn.py [--grid] [--out f.csv]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", action="store_true",
+                    help="full 80-experiment paper grid")
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--eval-n", type=int, default=512)
+    ap.add_argument("--out", default=None, help="also write CSV here")
+    args = ap.parse_args()
+
+    from benchmarks import table_iv_accuracy
+
+    argv = ["--train-steps", str(args.train_steps),
+            "--eval-n", str(args.eval_n)]
+    if args.grid:
+        argv.append("--full")
+    rows = table_iv_accuracy.main(argv)
+
+    if args.out:
+        import csv
+        with open(args.out, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"[grid] wrote {len(rows)} rows to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Assigned input shapes (one set shared by all LM archs).
+
+``train_*`` lowers train_step; ``prefill_*`` lowers the serving prefill;
+``decode_*`` / ``long_*`` lower serve_step (one new token against a KV
+cache of seq_len). long_500k requires a sub-quadratic arch
+(cfg.subquadratic) — the dry-run records a documented SKIP otherwise
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Shape", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}

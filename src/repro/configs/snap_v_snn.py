@@ -1,0 +1,26 @@
+"""The paper's own workload configs: SNAP-V MNIST spiking MLPs.
+
+Table IV grid: hidden sizes {16, 32, 64, 128, 256} x T in {25, 50, 75,
+100} (train) x same (infer). Plus the Cerebra-H accelerator geometry.
+"""
+
+from repro.core.cerebra_h import CerebraHConfig
+from repro.core.lif import LIFParams
+from repro.core.mapping import ClusterGeometry
+from repro.snn.model import SNNModelConfig
+
+HIDDEN_SIZES = (16, 32, 64, 128, 256)
+TIMESTEPS = (25, 50, 75, 100)
+
+ACCELERATOR = CerebraHConfig(
+    geometry=ClusterGeometry(
+        n_clusters=32, neurons_per_cluster=32, clusters_per_group=4,
+        rows_per_group=2048),
+    row_mode="external_broadcast",
+)
+
+LIF = LIFParams(decay_rate=0.1, threshold=1.0, reset_mode="zero")
+
+
+def model_config(hidden: int) -> SNNModelConfig:
+    return SNNModelConfig(layer_sizes=(784, hidden, 10), params=LIF)

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: Cerebra accelerators in JAX.
+
+Public surface:
+  fixedpoint   — Q16.16 emulation, shift decay
+  lif          — LIF neuron (float reference / fixed hardware / trainable)
+  coding       — Poisson rate encoder, spike decoders
+  network      — logical SNN description (adjacency-matrix form)
+  mapping      — placement compiler + SRAM capacity checks + NoC profile
+  cerebra_s    — bus-based baseline accelerator (functional + cost model)
+  cerebra_h    — clustered NoC accelerator (functional + cost model)
+  software     — float software-reference inference
+  energy       — Table-V-calibrated power/energy model
+  timing       — cycle -> wall-time model (10.17 / 96.24 MHz)
+  session      — SoC orchestration: deploy/run, multi-model co-residency
+"""
+
+from repro.core import (  # noqa: F401
+    cerebra_h,
+    cerebra_s,
+    coding,
+    energy,
+    fixedpoint,
+    lif,
+    mapping,
+    network,
+    session,
+    software,
+    timing,
+)

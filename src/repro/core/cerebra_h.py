@@ -1,0 +1,230 @@
+"""Cerebra-H — the clustered, hierarchical-NoC accelerator (paper §V).
+
+Functional model (bit-exact int32) + cycle cost model + energy hooks.
+
+Hardware semantics modeled:
+  * 32 clusters x 32 neurons; cluster groups of 4 share a single-port
+    weight SRAM (2048 rows x 1024 b). The Weight Resolver arbitrates four
+    per-cluster request queues at one grant per cycle.
+  * Incoming Forwarder looks up (src cluster-ID, src neuron-ID) -> row
+    address, fetches the 32-wide weight row and delivers weights to its
+    cluster's neurons.
+  * Neurons: accumulator + SHIFT-based decay (rates {.125,.25,.5,.75}) +
+    configurable reset (hold / zero / subtract).
+  * Two-layer NoC: L1 router per 4 clusters, central L2 over 8 L1s; spike
+    path is pipelined/buffered, config path is bufferless.
+  * Multi-model co-residency via disjoint cluster subsets.
+
+TPU adaptation: the blocked weight layout (source, dst_cluster, 32) is the
+SRAM row structure; the functional timestep is a cluster-blocked int32
+matmul + fused shift-decay LIF — the Pallas kernel in
+``repro.kernels.spike_timestep`` implements exactly this with cluster-gated
+block skipping; this module is the pure-jnp reference and carries the
+cycle/energy accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.lif import LIFParams
+from repro.core.mapping import (
+    ClusterGeometry,
+    Placement,
+    check_capacity,
+    communication_profile,
+    place_contiguous,
+)
+from repro.core.network import SNNetwork
+
+__all__ = ["CerebraHConfig", "CerebraHProgram", "compile_network", "run"]
+
+MAX_FREQ_MHZ = 96.24  # paper §VII-B: Cerebra-H critical path 10.3904 ns
+
+
+@dataclasses.dataclass(frozen=True)
+class CerebraHConfig:
+    geometry: ClusterGeometry = dataclasses.field(default_factory=ClusterGeometry)
+    fmt: fxp.FixedPointFormat = fxp.Q16_16
+    row_mode: str = "external_broadcast"
+    # NoC micro-timing (paper Table II + §V-D): spike path is pipelined —
+    # throughput 1 packet/cycle/link after `spike_pipeline_depth` cycles.
+    spike_pipeline_depth: int = 2
+    l2_hop_cycles: int = 2
+    sync_overhead_cycles: int = 4  # timestep-boundary completion handshake
+
+
+@dataclasses.dataclass
+class CerebraHProgram:
+    config: CerebraHConfig
+    params: LIFParams
+    placement: Placement
+    n_inputs: int
+    n_neurons: int
+    # blocked SRAM image: (n_sources, n_clusters, neurons_per_cluster) int32
+    weights_raw: jnp.ndarray
+    # row incidence: (n_sources, n_clusters) bool — a row exists for this
+    # (source, dst cluster) pair (drives resolver cost + gated kernel)
+    row_exists: np.ndarray
+    # per-source nonzero synapse count (SOPs per spike of that source)
+    fanout: np.ndarray
+    output_map: np.ndarray        # physical slots of output neurons, ordered
+    decay_rate: float             # snapped to hardware-supported rate
+    capacity_report: dict
+    comm_profile: dict
+
+    @property
+    def n_sources(self) -> int:
+        return self.n_inputs + self.config.geometry.n_physical
+
+
+def compile_network(
+    net: SNNetwork,
+    config: CerebraHConfig | None = None,
+    placement: Placement | None = None,
+) -> CerebraHProgram:
+    """Place, check capacity, quantize and block a logical network."""
+    config = config or CerebraHConfig()
+    geom = config.geometry
+    net.validate()
+    placement = placement or place_contiguous(net, geom)
+    capacity = check_capacity(net, placement, config.row_mode)
+    comm = communication_profile(net, placement)
+
+    n_phys = geom.n_physical
+    n_in = net.n_inputs
+    # scatter logical weights into the physical array layout
+    W = np.zeros((n_in + n_phys, n_phys), np.float32)
+    phys = placement.neuron_to_physical
+    W[:n_in, phys] = net.weights[:n_in]
+    # neuron-to-neuron: source neuron i lives at phys[i]
+    W[n_in + phys[:, None], phys[None, :]] = net.weights[n_in:]
+    w_raw = fxp.np_to_fixed(W, config.fmt)
+    blocked = w_raw.reshape(
+        n_in + n_phys, geom.n_clusters, geom.neurons_per_cluster
+    )
+    row_exists = (blocked != 0).any(axis=-1)
+
+    # deployment-time snapping of the trained decay to a hardware rate —
+    # one of the two quantization effects the accuracy study measures.
+    decay_rate = fxp.nearest_shift_decay(net.params.decay_rate)
+
+    lo, hi = net.output_slice
+    return CerebraHProgram(
+        config=config,
+        params=net.params,
+        placement=placement,
+        n_inputs=n_in,
+        n_neurons=net.n_neurons,
+        weights_raw=jnp.asarray(blocked),
+        row_exists=np.asarray(row_exists),
+        fanout=np.count_nonzero(W, axis=1),
+        output_map=phys[lo:hi],
+        decay_rate=decay_rate,
+        capacity_report=capacity,
+        comm_profile=comm,
+    )
+
+
+def _timestep(program: CerebraHProgram, carry, ext_spikes_t):
+    """One Cerebra-H timestep. carry: {'v': (B,P) i32, 'spikes': (B,P) i32}."""
+    cfg = program.config
+    geom = cfg.geometry
+    v, prev_spikes = carry["v"], carry["spikes"]
+    B = v.shape[0]
+    sources = jnp.concatenate(
+        [ext_spikes_t.astype(jnp.int32), prev_spikes], axis=-1
+    )  # (B, S)
+
+    # ---- accumulate: blocked matmul == per-row fetch + 32-wide delivery ----
+    Wb = program.weights_raw  # (S, C, n)
+    syn = jax.lax.dot_general(
+        sources,
+        Wb.reshape(Wb.shape[0], -1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # (B, C*n)
+
+    # ---- fused LIF with shift decay ----
+    v_decayed = fxp.shift_decay(v, program.decay_rate)
+    v_new = v_decayed + syn
+    thr = jnp.int32(program.params.threshold_raw)
+    spikes = (v_new >= thr).astype(jnp.int32)
+    if program.params.reset_mode == "zero":
+        v_out = jnp.where(spikes > 0, jnp.int32(0), v_new)
+    elif program.params.reset_mode == "subtract":
+        v_out = v_new - spikes * thr
+    else:  # hold
+        v_out = v_new
+
+    # ---- cost model -------------------------------------------------------
+    # Row fetches per group: every spiking source requests one row per
+    # destination cluster it connects to; the single-port SRAM serves one
+    # row/cycle per group (resolver arbitration), groups run in parallel.
+    row_exists = jnp.asarray(program.row_exists, jnp.int32)  # (S, C)
+    rows_active = jax.lax.dot_general(
+        sources, row_exists, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # (B, C) row fetches destined to each cluster
+    rows_per_group = rows_active.reshape(
+        B, geom.n_groups, geom.clusters_per_group
+    ).sum(-1)  # (B, G)
+    group_cycles = rows_per_group.max(axis=-1)  # (B,) parallel groups
+
+    # NoC spike-path cost: each spiking neuron emits one packet per
+    # destination cluster (the Outgoing Encoder serializes one per cycle);
+    # L1 links run in parallel; packets crossing L2 add hop latency.
+    # Packets per source cluster = spikes in that cluster x its row fanout.
+    neuron_rows = row_exists[program.n_inputs :]  # (P, C)
+    pkt_per_neuron = neuron_rows.sum(-1)  # (P,) packets a spike generates
+    spk = prev_spikes  # packets for *this* step come from prev boundary
+    pkts_by_cluster = (
+        (spk * pkt_per_neuron[None, :])
+        .reshape(B, geom.n_clusters, geom.neurons_per_cluster)
+        .sum(-1)
+    )  # (B, C)
+    l1_cycles = pkts_by_cluster.reshape(
+        B, geom.n_l1_routers, geom.clusters_per_l1
+    ).sum(-1).max(-1)  # serialize per L1 router, routers in parallel
+    noc_cycles = l1_cycles + cfg.spike_pipeline_depth + cfg.l2_hop_cycles
+
+    cycles = (
+        jnp.maximum(group_cycles, noc_cycles) + cfg.sync_overhead_cycles
+    )
+    fanout = jnp.asarray(program.fanout, jnp.int32)
+    sops = jnp.sum(sources * fanout[None, :], axis=-1)  # true synaptic ops
+    row_fetches = rows_active.sum(-1)  # (B,) SRAM row reads this step
+
+    return {"v": v_out, "spikes": spikes}, (
+        spikes, cycles, sops, row_fetches
+    )
+
+
+def run(program: CerebraHProgram, ext_spikes):
+    """Run inference. ext_spikes: (T, B, n_inputs) in {0,1}.
+
+    Returns dict with spike raster (physical layout), logical output counts,
+    and per-step cycles / SOPs / SRAM row fetches.
+    """
+    ext_spikes = jnp.asarray(ext_spikes)
+    B = ext_spikes.shape[1]
+    n_phys = program.config.geometry.n_physical
+    carry = {
+        "v": jnp.zeros((B, n_phys), jnp.int32),
+        "spikes": jnp.zeros((B, n_phys), jnp.int32),
+    }
+    step = lambda c, x: _timestep(program, c, x)
+    _, (spikes, cycles, sops, rows) = jax.lax.scan(step, carry, ext_spikes)
+    out_counts = jnp.sum(spikes[:, :, jnp.asarray(program.output_map)], axis=0)
+    return {
+        "spikes": spikes,
+        "output_counts": out_counts,
+        "cycles": cycles,
+        "sops": sops,
+        "row_fetches": rows,
+    }

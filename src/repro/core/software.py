@@ -1,0 +1,43 @@
+"""Float software-reference inference — the paper's snnTorch baseline role.
+
+Runs a logical :class:`~repro.core.network.SNNetwork` in float32 with the
+exact trained decay (not snapped to hardware rates) and unquantized
+weights. The accuracy-deviation experiments (paper Table IV) compare this
+against the bit-exact Cerebra-H hardware model on identical spike trains.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import lif_step_float
+from repro.core.network import SNNetwork
+
+__all__ = ["run_software"]
+
+
+def run_software(net: SNNetwork, ext_spikes):
+    """Float32 inference. ext_spikes: (T, B, n_inputs) in {0,1}.
+
+    Returns {'spikes': (T,B,N) f32, 'output_counts': (B, n_out) f32}.
+    """
+    W = jnp.asarray(net.weights)  # (n_in + N, N) float32
+    ext_spikes = jnp.asarray(ext_spikes, jnp.float32)
+    B = ext_spikes.shape[1]
+    N = net.n_neurons
+
+    def step(carry, x_t):
+        v, prev = carry
+        sources = jnp.concatenate([x_t, prev], axis=-1)  # (B, n_in + N)
+        syn = sources @ W
+        state, spikes = lif_step_float({"v": v}, syn, net.params)
+        return (state["v"], spikes), spikes
+
+    carry = (jnp.zeros((B, N)), jnp.zeros((B, N)))
+    _, spikes = jax.lax.scan(step, carry, ext_spikes)
+    lo, hi = net.output_slice
+    return {
+        "spikes": spikes,
+        "output_counts": jnp.sum(spikes[:, :, lo:hi], axis=0),
+    }

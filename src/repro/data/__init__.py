@@ -1,0 +1,7 @@
+"""Deterministic, stateless, shardable data pipelines.
+
+  mnist — procedural MNIST (or real IDX files when present)
+  lm    — synthetic Markov/Zipf token streams for the LM archs
+"""
+
+from repro.data import lm, mnist  # noqa: F401

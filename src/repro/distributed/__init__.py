@@ -1,0 +1,3 @@
+"""Distribution: partition rules, straggler mitigation, elastic helpers."""
+
+from repro.distributed import partition, straggler  # noqa: F401

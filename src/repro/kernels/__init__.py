@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the Cerebra-H hot path.
+
+  lif_step       — fused decay+integrate+fire+reset (one HBM pass over V)
+  spike_timestep — cluster-gated accumulate + LIF epilogue (the paper's
+                   event-driven row fetch, re-architected for VMEM/VPU)
+  poisson_encode — counter-hash rate encoder (the SoC coding unit)
+  ops            — public jitted wrappers (padding, activity bitmap,
+                   platform dispatch); use these, not pallas_call directly
+  ref            — pure-jnp oracles; tests assert bit-exactness
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

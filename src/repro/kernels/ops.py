@@ -1,0 +1,132 @@
+"""Public jitted wrappers around the Pallas kernels.
+
+Responsibilities: shape padding to hardware-aligned blocks, activity-bitmap
+computation for the event gate, platform dispatch (interpret=True on CPU so
+the kernel bodies are validated everywhere; compiled Mosaic on TPU), and
+un-padding of results. These are the functions the rest of the framework
+calls; nothing else should touch pallas_call directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lif_step as _lif
+from repro.kernels import poisson_encode as _enc
+from repro.kernels import spike_timestep as _ts
+
+__all__ = ["lif_step", "spike_timestep", "poisson_encode", "on_cpu"]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis: int, multiple: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("decay_rate", "threshold_raw", "reset_mode",
+                     "interpret"),
+)
+def lif_step(v, syn, *, decay_rate: float, threshold_raw: int,
+             reset_mode: str = "zero", interpret: bool | None = None):
+    """Fused LIF update. v, syn: (B, N) int32 -> (v_out, spikes)."""
+    interpret = on_cpu() if interpret is None else interpret
+    B, N = v.shape
+    vp = _pad_to(_pad_to(v, 0, 8), 1, 128)
+    sp = _pad_to(_pad_to(syn, 0, 8), 1, 128)
+    rows, cols = vp.shape
+    fn = _lif.build_lif_step(
+        (rows, cols),
+        decay_rate=decay_rate,
+        threshold_raw=threshold_raw,
+        reset_mode=reset_mode,
+        block_rows=min(256, rows),
+        block_cols=min(1024, cols),
+        interpret=interpret,
+    )
+    v_out, spikes = fn(vp, sp)
+    return v_out[:B, :N], spikes[:B, :N]
+
+
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("decay_rate", "threshold_raw", "reset_mode",
+                     "use_mxu", "block_batch", "block_src", "interpret"),
+)
+def spike_timestep(sources, weights, v, *, decay_rate: float,
+                   threshold_raw: int, reset_mode: str = "zero",
+                   use_mxu: bool = False, block_batch: int = 8,
+                   block_src: int = 128, interpret: bool | None = None):
+    """One fused, event-gated accelerator timestep.
+
+    sources: (B, S) int/bool spikes; weights: (S, P) int32 raw Q16.16;
+    v: (B, P) int32. Returns (v_out, spikes_out), each (B, P) int32.
+
+    ``use_mxu=False`` (default) is bit-exact. ``use_mxu=True`` runs the
+    accumulate on the MXU in f32 — exact only while per-output partial sums
+    stay below 2^24 (fine for |w| <~ 1.0 Q16.16 and fan-in <= 256; the SNN
+    trainer's weight clip guarantees it).
+    """
+    interpret = on_cpu() if interpret is None else interpret
+    B, S = sources.shape
+    P = weights.shape[1]
+    sources = sources.astype(jnp.int32)
+    src_p = _pad_to(_pad_to(sources, 0, block_batch), 1, block_src)
+    w_p = _pad_to(_pad_to(weights, 0, block_src), 1, 128)
+    v_p = _pad_to(_pad_to(v, 0, block_batch), 1, 128)
+    Bp, Sp = src_p.shape
+    Pp = w_p.shape[1]
+    nb, ns = Bp // block_batch, Sp // block_src
+    # event gate bitmap: any spike in the (batch-tile, source-block)?
+    activity = (
+        src_p.reshape(nb, block_batch, ns, block_src)
+        .sum(axis=(1, 3))
+        .astype(jnp.int32)
+    )
+    fn = _ts.build_spike_timestep(
+        Bp, Sp, Pp,
+        decay_rate=decay_rate,
+        threshold_raw=threshold_raw,
+        reset_mode=reset_mode,
+        block_batch=block_batch,
+        block_src=block_src,
+        use_mxu=use_mxu,
+        interpret=interpret,
+    )
+    v_out, spikes = fn(activity, src_p, w_p, v_p)
+    return v_out[:B, :P], spikes[:B, :P]
+
+
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("num_steps", "block_batch", "interpret")
+)
+def poisson_encode(seed, intensities, num_steps: int, *,
+                   block_batch: int = 8, interpret: bool | None = None):
+    """Hardware rate encoder. intensities: (B, D) f32 -> (T, B, D) i32."""
+    interpret = on_cpu() if interpret is None else interpret
+    B, D = intensities.shape
+    x = _pad_to(_pad_to(intensities.astype(jnp.float32), 0, block_batch),
+                1, 128)
+    Bp, Dp = x.shape
+    fn = _enc.build_poisson_encode(
+        Bp, Dp, num_steps, block_batch=block_batch, interpret=interpret
+    )
+    seed_arr = jnp.asarray([seed], jnp.int32).reshape(1)
+    out = fn(seed_arr, x)
+    return out[:, :B, :D]

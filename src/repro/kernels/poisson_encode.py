@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: hardware rate encoder (Coding Hardware Unit).
+
+The SoC's encoder turns sensor intensities in [0,1] into Bernoulli spike
+trains. The ASIC uses an LFSR; we use a counter-based murmur-finalizer hash
+over (seed, timestep, batch, dim) — a pure function, so the kernel and the
+pure-jnp oracle (ref.hash_u32_ref) are bit-identical, and encoding is
+reproducible across shardings (each position derives its own randomness,
+no sequential state). All ops are plain uint32 arithmetic: interpret-safe
+on CPU, VPU-native on TPU (no pltpu.prng_* dependency).
+
+Grid: (T, batch_tiles); each step emits a (block_batch, D) spike block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["poisson_encode_kernel", "build_poisson_encode"]
+
+_PRIME_T = 0x9E3779B1
+_PRIME_B = 0x85EBCA77
+_PRIME_D = 0xC2B2AE3D
+
+
+def _mix(h):
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def poisson_encode_kernel(seed_ref, intens_ref, out_ref, *,
+                          block_batch: int):
+    t = pl.program_id(0)
+    bt = pl.program_id(1)
+    intens = intens_ref[...]  # (block_batch, D) float32
+    D = intens.shape[1]
+    b_idx = (jax.lax.broadcasted_iota(jnp.uint32, (block_batch, D), 0)
+             + jnp.uint32(bt * block_batch))
+    d_idx = jax.lax.broadcasted_iota(jnp.uint32, (block_batch, D), 1)
+    h = (seed_ref[0].astype(jnp.uint32)
+         ^ (jnp.uint32(t) * jnp.uint32(_PRIME_T))
+         ^ (b_idx * jnp.uint32(_PRIME_B))
+         ^ (d_idx * jnp.uint32(_PRIME_D)))
+    h = _mix(h)
+    intens = jnp.clip(intens, 0.0, 1.0)
+    thr = jnp.minimum(intens * jnp.float32(4294967296.0),
+                      jnp.float32(4294967040.0)).astype(jnp.uint32)
+    fire = (h < thr) | (intens >= 1.0)
+    out_ref[...] = fire.astype(jnp.int32)[None]
+
+
+def build_poisson_encode(batch: int, dim: int, num_steps: int, *,
+                         block_batch: int = 8, interpret: bool = False):
+    """Build fn(seed_arr, intensities) -> (T, batch, dim) int32 spikes.
+
+    seed_arr: (1,) int32; intensities: (batch, dim) f32, batch pre-padded
+    to a multiple of block_batch, dim to a multiple of 128.
+    """
+    if batch % block_batch or dim % 128:
+        raise ValueError("shapes must be pre-padded (batch | dim)")
+    nb = batch // block_batch
+    kernel = functools.partial(poisson_encode_kernel,
+                               block_batch=block_batch)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_steps, nb),
+        in_specs=[
+            pl.BlockSpec((block_batch, dim), lambda t, b, seed: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_batch, dim),
+                               lambda t, b, seed: (t, b, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_steps, batch, dim), jnp.int32),
+        interpret=interpret,
+    )

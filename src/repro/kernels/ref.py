@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-exact specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts exact equality for
+the integer paths, allclose for the float paths).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "lif_step_ref",
+    "spike_timestep_ref",
+    "poisson_encode_ref",
+    "hash_u32_ref",
+]
+
+
+def _shift_decay(v, rate: float):
+    v = jnp.asarray(v, jnp.int32)
+    if rate == 0.125:
+        return v - (v >> 3)
+    if rate == 0.25:
+        return v - (v >> 2)
+    if rate == 0.5:
+        return v - (v >> 1)
+    if rate == 0.75:
+        return v >> 2
+    raise ValueError(rate)
+
+
+def lif_step_ref(v, syn, *, decay_rate: float, threshold_raw: int,
+                 reset_mode: str):
+    """Oracle for kernels.lif_step — fused hardware LIF update.
+
+    v, syn: (..., N) int32. Returns (v_out, spikes) int32.
+    """
+    v = jnp.asarray(v, jnp.int32)
+    syn = jnp.asarray(syn, jnp.int32)
+    v_new = _shift_decay(v, decay_rate) + syn
+    thr = jnp.int32(threshold_raw)
+    spikes = (v_new >= thr).astype(jnp.int32)
+    if reset_mode == "zero":
+        v_out = jnp.where(spikes > 0, jnp.int32(0), v_new)
+    elif reset_mode == "subtract":
+        v_out = v_new - spikes * thr
+    elif reset_mode == "hold":
+        v_out = v_new
+    else:
+        raise ValueError(reset_mode)
+    return v_out, spikes
+
+
+def spike_timestep_ref(sources, weights, v, *, decay_rate: float,
+                       threshold_raw: int, reset_mode: str):
+    """Oracle for kernels.spike_timestep — one fused accelerator timestep.
+
+    sources: (B, S) int32 in {0,1}; weights: (S, P) int32 (raw Q16.16 SRAM
+    image, flattened over clusters); v: (B, P) int32.
+    Returns (v_out, spikes_out, syn) int32.
+    """
+    sources = jnp.asarray(sources, jnp.int32)
+    weights = jnp.asarray(weights, jnp.int32)
+    syn = jnp.matmul(sources, weights, preferred_element_type=jnp.int32)
+    v_out, spikes = lif_step_ref(
+        v, syn, decay_rate=decay_rate, threshold_raw=threshold_raw,
+        reset_mode=reset_mode,
+    )
+    return v_out, spikes, syn
+
+
+# --------------------------------------------------------------------------
+# Counter-based hash encoder (murmur3 finalizer). The ASIC uses an LFSR per
+# coding unit; we use a counter-based hash so that spike(seed, t, b, d) is a
+# pure function — the same reproducibility contract, and identical between
+# the kernel and this oracle.
+# --------------------------------------------------------------------------
+
+_PRIME_T = jnp.uint32(0x9E3779B1)   # golden-ratio odd constants
+_PRIME_B = jnp.uint32(0x85EBCA77)
+_PRIME_D = jnp.uint32(0xC2B2AE3D)
+
+
+def hash_u32_ref(seed, t, b, d):
+    """Mix (seed, timestep, batch, dim) -> uniform uint32."""
+    h = (jnp.uint32(seed)
+         ^ (jnp.asarray(t, jnp.uint32) * _PRIME_T)
+         ^ (jnp.asarray(b, jnp.uint32) * _PRIME_B)
+         ^ (jnp.asarray(d, jnp.uint32) * _PRIME_D))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def poisson_encode_ref(seed: int, intensities, num_steps: int):
+    """Oracle for kernels.poisson_encode.
+
+    intensities: (B, D) float32 in [0,1]. Returns (T, B, D) int32 {0,1}.
+    spike <=> hash(seed,t,b,d) < intensity * 2^32.
+    """
+    intensities = jnp.clip(jnp.asarray(intensities, jnp.float32), 0.0, 1.0)
+    B, D = intensities.shape
+    t = jnp.arange(num_steps, dtype=jnp.uint32)[:, None, None]
+    b = jnp.arange(B, dtype=jnp.uint32)[None, :, None]
+    d = jnp.arange(D, dtype=jnp.uint32)[None, None, :]
+    h = hash_u32_ref(jnp.uint32(seed), t, b, d)
+    # threshold in uint32; intensity==1.0 -> always fire (use >= on negated)
+    thr = jnp.minimum(intensities * jnp.float32(4294967296.0),
+                      jnp.float32(4294967040.0)).astype(jnp.uint32)
+    fire = (h < thr[None]) | (intensities[None] >= 1.0)
+    return fire.astype(jnp.int32)

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — import it only
+as an entry point (``python -m repro.launch.dryrun``), never from tests.
+"""
+
+from repro.launch import mesh, steps  # noqa: F401

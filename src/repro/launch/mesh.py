@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization; tests and
+benches must keep seeing 1 CPU device).
+
+Topology (TPU v5e-256 pods): a pod is a 16x16 ICI torus -> mesh (16, 16)
+("data", "model"): the model axis maps onto one torus dimension (fast ICI
+ring for TP collectives), the data axis onto the other (FSDP/DP). The
+multi-pod mesh (2, 16, 16) adds a "pod" axis over DCI — only
+batch/gradient collectives cross it (DESIGN.md §5), mirroring the paper's
+L1 (intra-cluster) vs L2 (inter-cluster) NoC hierarchy.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

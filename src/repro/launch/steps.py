@@ -1,0 +1,304 @@
+"""LMHarness: per-(arch x shape) step functions + ShapeDtypeStruct specs.
+
+The harness owns everything dryrun/train/serve need:
+  * ``param_shapes()``       — eval_shape of init (no allocation)
+  * ``batch_shapes(shape)``  — ShapeDtypeStruct stand-ins for every input
+  * ``train_step``           — microbatched grad-accumulation + AdamW
+  * ``prefill_step``         — build + fill KV caches
+  * ``decode_step``          — one token against the cache
+  * ``shardings(...)``       — in/out shardings from the partitioner
+
+Microbatching policy: global_batch is split so each data-shard row
+processes ONE sequence per microbatch (n_micro = global_batch /
+batch_shard_size); gradients accumulate in f32 across the lax.scan. This
+is what bounds train-step activation memory at seq 4096 x batch 256 on
+16 GB chips (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.configs.shapes import Shape
+from repro.distributed import partition as part
+from repro.training import optimizers
+
+__all__ = ["LMHarness", "SkipCell"]
+
+
+class SkipCell(Exception):
+    """Raised when an (arch x shape) cell is N/A (documented skip)."""
+
+
+@dataclasses.dataclass
+class LMHarness:
+    arch_id: str
+    cfg: Any = None
+    lr: float = 1e-4
+    expert_parallel: bool = False   # §Perf lever (MoE EP vs TP)
+    attn_tp: bool = True            # §Perf lever (replicate attn weights)
+    micro_rows: int = 1             # sequences per data shard per microbatch
+
+    def __post_init__(self):
+        mod = configs.get_arch(self.arch_id)
+        self.cfg = self.cfg or mod.CONFIG
+        self.model = mod.build(self.cfg)
+        self.is_whisper = self.arch_id == "whisper-large-v3"
+        self.opt = optimizers.adamw(self.lr, weight_decay=0.01)
+
+    # ------------------------------------------------------------------
+    # shapes (no allocation anywhere)
+    # ------------------------------------------------------------------
+    def param_shapes(self):
+        return jax.eval_shape(
+            lambda: self.model.init(jax.random.key(0)))
+
+    def opt_shapes(self):
+        return jax.eval_shape(
+            lambda: self.opt.init(self.param_shapes_zeros()))
+
+    def param_shapes_zeros(self):
+        # opt.init only reads shapes/dtypes; reuse eval_shape structs
+        return self.param_shapes()
+
+    def check_cell(self, shape: Shape) -> None:
+        if shape.name == "long_500k" and not self.cfg.subquadratic:
+            raise SkipCell(
+                f"{self.arch_id} is pure full-attention; long_500k needs a "
+                f"sub-quadratic arch (DESIGN.md §4)")
+
+    def batch_shapes(self, shape: Shape) -> dict:
+        """Inputs for train/prefill kinds (decode uses token_shapes)."""
+        self.check_cell(shape)
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        i32 = jnp.int32
+        if self.is_whisper:
+            half = S // 2
+            return {
+                "enc_embeds": jax.ShapeDtypeStruct((B, half, cfg.d_model),
+                                                   cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, half), i32),
+                "targets": jax.ShapeDtypeStruct((B, half), i32),
+            }
+        if cfg.frontend == "embeddings":
+            out = {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               cfg.dtype),
+                "targets": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if cfg.mrope:
+                out["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+            return out
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+        }
+
+    def cache_shapes(self, shape: Shape):
+        self.check_cell(shape)
+        B, S = shape.global_batch, shape.seq_len
+        if self.is_whisper:
+            half = S // 2
+            return jax.eval_shape(
+                lambda: self.model.init_cache(B, half, half))
+        return jax.eval_shape(lambda: self.model.init_cache(B, S))
+
+    def token_shapes(self, shape: Shape) -> dict:
+        """Decode-step inputs (one new token)."""
+        B = shape.global_batch
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+    # ------------------------------------------------------------------
+    # steps
+    # ------------------------------------------------------------------
+    def n_microbatches(self, shape: Shape, mesh) -> int:
+        rules = self.rules(mesh)
+        shard = part._axis_size(mesh, tuple(rules.batch_axes))
+        if shape.global_batch % shard != 0:
+            return 1
+        n = max(1, shape.global_batch // (shard * self.micro_rows))
+        while shape.global_batch % (shard * n) != 0 and n > 1:
+            n -= 1
+        return max(1, n)
+
+    def make_train_step(self, shape: Shape, mesh):
+        n_micro = self.n_microbatches(shape, mesh)
+        model, opt = self.model, self.opt
+        rules = self.rules(mesh)
+        p_shard = part.params_partition(self.param_shapes(), mesh, rules)
+
+        n_shards = part._axis_size(mesh, tuple(rules.batch_axes))
+        act_ctx = functools.partial(
+            part.activation_sharding, rules.batch_axes,
+            shape.global_batch, mesh)
+
+        def train_step(params, opt_state, batch):
+          with act_ctx():
+            # Pre-split microbatches STRIDED across data shards: microbatch
+            # m takes row m of every shard, so each microbatch stays fully
+            # data-parallel AND the reshape never crosses the sharded dim
+            # (a dynamic_slice along the sharded batch axis would force an
+            # all-gather and replicate every activation).
+            xs = jax.tree.map(
+                lambda x: _strided_split(x, n_micro, n_shards), batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (loss, parts), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, mb, remat=True)
+                del parts
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                # keep the f32 accumulator sharded like the params — left
+                # to propagation it replicates (10 GB/dev for a 2.5B arch)
+                gsum = jax.lax.with_sharding_constraint(gsum, p_shard)
+                return (gsum, lsum + loss), None
+
+            gsum = jax.lax.with_sharding_constraint(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params),
+                p_shard)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (gsum, jnp.zeros((), jnp.float32)), xs)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            grads, gnorm = optimizers.clip_by_global_norm(grads, 1.0)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = optimizers.apply_updates(params, updates)
+            return params, opt_state, {"loss": lsum / n_micro,
+                                       "grad_norm": gnorm}
+
+        return train_step
+
+    def make_prefill_step(self, shape: Shape, mesh=None):
+        B, S = shape.global_batch, shape.seq_len
+        model = self.model
+        act_ctx = (functools.partial(
+            part.activation_sharding, self.rules(mesh).batch_axes, B, mesh)
+            if mesh is not None else _null_ctx)
+
+        if self.is_whisper:
+            half = S // 2
+
+            def prefill(params, batch):
+                with act_ctx():
+                    cache = model.init_cache(B, half, half)
+                    return model.prefill(params, batch, cache)
+
+            return prefill
+
+        def prefill(params, batch):
+            with act_ctx():
+                cache = model.init_cache(B, S)
+                return model.prefill(params, batch, cache)
+
+        return prefill
+
+    def make_decode_step(self, shape: Shape):
+        model = self.model
+        cfg = self.cfg
+        seq_len = shape.seq_len
+
+        def decode(params, cache, token_in, pos):
+            tin = dict(token_in)
+            if cfg.mrope:
+                B = token_in["tokens"].shape[0]
+                tin["mrope_positions"] = jnp.broadcast_to(
+                    jnp.asarray(pos, jnp.int32), (3, B, 1))
+            logits, cache = model.decode_step(params, tin, pos, cache)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok[:, None], cache
+
+        del seq_len
+        return decode
+
+    # ------------------------------------------------------------------
+    # shardings
+    # ------------------------------------------------------------------
+    def rules(self, mesh) -> part.PartitionRules:
+        return part.PartitionRules.default(
+            mesh, expert_parallel=self.expert_parallel,
+            attn_tp=self.attn_tp)
+
+    def shardings(self, shape: Shape, mesh, kind: str):
+        """Returns (in_shardings, out_shardings, example_args) for jit."""
+        rules = self.rules(mesh)
+        replicated = NamedSharding(mesh, PartitionSpec())
+        p_shapes = self.param_shapes()
+        p_shard = part.params_partition(p_shapes, mesh, rules)
+        if kind == "train":
+            o_shapes = jax.eval_shape(self.opt.init, p_shapes)
+            o_shard = part.opt_partition(o_shapes, p_shard, mesh)
+            b_shapes = self.batch_shapes(shape)
+            b_shard = part.batch_partition(b_shapes, mesh, rules)
+            in_shardings = (p_shard, o_shard, b_shard)
+            out_shardings = (p_shard, o_shard, replicated)
+            args = (p_shapes, o_shapes, b_shapes)
+        elif kind == "prefill":
+            b_shapes = self.batch_shapes(shape)
+            b_shard = part.batch_partition(b_shapes, mesh, rules)
+            c_shapes = self.cache_shapes(shape)
+            c_shard = part.cache_partition(c_shapes, mesh, rules)
+            in_shardings = (p_shard, b_shard)
+            out_shardings = (replicated, c_shard)
+            args = (p_shapes, b_shapes)
+        elif kind == "decode":
+            c_shapes = self.cache_shapes(shape)
+            c_shard = part.cache_partition(c_shapes, mesh, rules)
+            t_shapes = self.token_shapes(shape)
+            t_shard = part.batch_partition(t_shapes, mesh, rules)
+            pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+            in_shardings = (p_shard, c_shard, t_shard, replicated)
+            out_shardings = (replicated, c_shard)
+            args = (p_shapes, c_shapes, t_shapes, pos_shape)
+        else:
+            raise ValueError(kind)
+        return in_shardings, out_shardings, args
+
+    def step_fn(self, shape: Shape, mesh, kind: str):
+        if kind == "train":
+            return self.make_train_step(shape, mesh)
+        if kind == "prefill":
+            return self.make_prefill_step(shape, mesh)
+        if kind == "decode":
+            return self.make_decode_step(shape)
+        raise ValueError(kind)
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null_ctx():
+    yield
+
+
+def _strided_split(x, n_micro, n_shards):
+    """(B, ...) -> (n_micro, B/n_micro, ...) with microbatches strided
+    across data shards. B = n_shards * n_micro * r; the sharded major dim
+    is preserved through the reshape. mrope (3, B, S) splits on axis 1."""
+    batch_axis = 1 if (x.ndim >= 2 and x.shape[0] == 3) else 0
+    B = x.shape[batch_axis]
+    if B % n_micro != 0:
+        raise ValueError(f"batch {B} not divisible by n_micro {n_micro}")
+    if B % (n_shards * n_micro) == 0:
+        r = B // (n_shards * n_micro)
+        split = (n_shards, n_micro, r)
+    else:  # batch not shardable anyway (e.g. long_500k B=1): plain split
+        split = (1, n_micro, B // n_micro)
+    pre = x.shape[:batch_axis]
+    post = x.shape[batch_axis + 1:]
+    y = x.reshape(pre + split + post)
+    # (..., D, M, r, ...) -> (M, ..., D*r, ...): scan axis leads
+    d_ax = batch_axis
+    y = jnp.moveaxis(y, d_ax + 1, 0)  # M to front
+    y = y.reshape((n_micro,) + pre + (split[0] * split[2],) + post)
+    return y

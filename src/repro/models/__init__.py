@@ -1,0 +1,12 @@
+"""LM model zoo: shared layers + family blocks + assembled models."""
+
+from repro.models import (  # noqa: F401
+    attention,
+    common,
+    mamba2,
+    moe,
+    rwkv6,
+    transformer,
+    whisper,
+    zamba2,
+)

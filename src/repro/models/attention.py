@@ -1,0 +1,354 @@
+"""Attention blocks: GQA/MQA (+SWA, local:global, M-RoPE, cross) and MLA.
+
+One code path serves train, prefill and decode:
+  * train/prefill: full (B,S) sequence, causal (+ window) mask, returns
+    the updated KV cache when one is passed.
+  * decode: x is (B,1,d); K/V are written at ``write_pos`` into the cache
+    (ring-buffer slot ``pos % cache_len``) and attention runs over the
+    cache with validity masks derived from per-slot position ids — this
+    uniformly supports full caches and sliding-window ring caches (the
+    sub-quadratic decode path for mixtral/gemma3 at 500k context).
+
+Caches are dicts of arrays so they shard under pjit (seq -> model axis by
+default; see repro.distributed.partition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.partition import constrain_batch, constrain_seq
+from repro.models.common import (
+    TransformerConfig, apply_mrope, apply_rope, dense_init, make_rope,
+    rms_norm,
+)
+
+__all__ = [
+    "init_gqa", "gqa_forward", "init_gqa_cache",
+    "init_mla", "mla_forward", "init_mla_cache",
+]
+
+_NEG_INF = -2.0 ** 30
+
+
+# --------------------------------------------------------------------------
+# GQA family
+# --------------------------------------------------------------------------
+
+def init_gqa(key, cfg: TransformerConfig, *, bias: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd)),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd)),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd)),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d)),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,))
+        p["bo"] = jnp.zeros((d,))
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,))}
+        p["k_norm"] = {"scale": jnp.zeros((hd,))}
+    return p
+
+
+def init_gqa_cache(cfg: TransformerConfig, batch: int, cache_len: int,
+                   dtype=None):
+    hd = cfg.resolved_head_dim
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    B, S = x.shape[0], x.shape[1]
+    return x.reshape(B, S, n_heads, hd)
+
+
+# Query-chunk length for the flash-style outer loop. Bounds the score
+# buffer at (B, H, CHUNK, T) f32 instead of (B, H, S, T) — the difference
+# between 536 MB and 137 GB per device on the prefill_32k cells.
+SDPA_CHUNK = 1024
+
+
+def _sdpa_block(q, k, v, mask, q_group: int, scores_bf16: bool = False):
+    """q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd); mask: (B,1,S,T)."""
+    B, S, Hq, hd = q.shape
+    g = q_group
+    Hkv = k.shape[2]
+    qg = q.reshape(B, S, Hkv, g, hd)
+    score_t = jnp.bfloat16 if scores_bf16 else jnp.float32
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=score_t)
+    scores = scores / np.asarray(np.sqrt(hd), score_t)
+    scores = scores + mask[:, :, None].astype(score_t)  # (B,1,1,S,T)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def sdpa(q, k, v, pos_q, pos_k, *, causal, window, q_group,
+         chunk: int = SDPA_CHUNK, scores_bf16: bool = False):
+    """Chunked SDPA: masks are built PER QUERY CHUNK (never a full (S,T)
+    mask in memory), and the score buffer is bounded by the chunk size."""
+    B, S, Hq, hd = q.shape
+    if S <= chunk or S % chunk != 0:
+        mask = _full_mask(pos_q, pos_k, causal=causal, window=window)
+        return _sdpa_block(q, k, v, mask, q_group, scores_bf16)
+    nc = S // chunk
+    qs = jnp.moveaxis(q.reshape(B, nc, chunk, Hq, hd), 1, 0)
+    ps = jnp.moveaxis(pos_q.reshape(B, nc, chunk), 1, 0)
+
+    def body(_, qp):
+        q_c, p_c = qp
+        mask = _full_mask(p_c, pos_k, causal=causal, window=window)
+        return None, _sdpa_block(q_c, k, v, mask, q_group, scores_bf16)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, hd)
+
+
+def _full_mask(positions_q, positions_k, *, causal: bool, window):
+    """(B,S),(B,T) -> additive mask (B,1,S,T).
+
+    ``window`` may be None (full), a Python int (static SWA), or a traced
+    int32 scalar from the per-layer schedule where 0 means "full
+    attention" (gemma3's 5:1 local:global inside one lax.scan body).
+    """
+    pq = positions_q[:, None, :, None]  # (B,1,S,1)
+    pk = positions_k[:, None, None, :]  # (B,1,1,T)
+    ok = jnp.ones(jnp.broadcast_shapes(pq.shape, pk.shape), bool)
+    if causal:
+        ok &= pk <= pq
+    if window is not None:
+        if isinstance(window, (int, np.integer)):
+            if window > 0:
+                ok &= pk > pq - window
+        else:  # traced: 0 disables the window dynamically
+            ok &= jnp.where(window > 0, pk > pq - window, True)
+    ok &= pk >= 0  # invalid (unwritten) cache slots carry pos -1
+    return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def gqa_forward(
+    p: dict,
+    x,
+    *,
+    cfg: TransformerConfig,
+    positions,                 # (B, S) int32 absolute positions of x
+    window: int | None = None,
+    causal: bool = True,
+    cache: dict | None = None,
+    write_pos=None,            # scalar int32: decode slot base (pos of x[:,0])
+    mrope_positions=None,      # (3, B, S) when cfg.mrope
+    kv_x=None,                 # cross-attention source (B, T, d)
+    kv_positions=None,
+):
+    """Returns (out (B,S,d), new_cache)."""
+    hd = cfg.resolved_head_dim
+    B, S = x.shape[0], x.shape[1]
+    q = _split_heads(x @ p["wq"] + p.get("bq", 0.0), cfg.n_heads, hd)
+    src = kv_x if kv_x is not None else x
+    k = _split_heads(src @ p["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(src @ p["wv"] + p.get("bv", 0.0), cfg.n_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+
+    if kv_x is None:  # self-attention: rotary on q and k
+        if cfg.mrope and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, hd, cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, hd, cfg.rope_theta)
+        elif not cfg.attn_bias:  # whisper uses learned abs pos, no rope
+            cos, sin = make_rope(positions, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+
+    new_cache = cache
+    if cache is not None and kv_x is None:
+        cache_len = cache["k"].shape[1]
+        if write_pos is None:
+            raise ValueError("cache updates require write_pos")
+        if S > 1:
+            # Prefill: attend over the IN-CALL K/V (ring eviction must not
+            # shadow tokens still inside their window), then persist only
+            # the last cache_len entries into the ring.
+            n_keep = min(S, cache_len)
+            tail = write_pos + S - n_keep + jnp.arange(n_keep,
+                                                       dtype=jnp.int32)
+            slots = tail % cache_len
+            k_c = cache["k"].at[:, slots].set(
+                k[:, S - n_keep:].astype(cache["k"].dtype))
+            v_c = cache["v"].at[:, slots].set(
+                v[:, S - n_keep:].astype(cache["v"].dtype))
+            slot_pos = cache["slot_pos"].at[slots].set(tail)
+            new_cache = {"k": k_c, "v": v_c, "slot_pos": slot_pos}
+            k_att, v_att = k, v
+            pos_k = positions
+        else:
+            # Decode: write this token's slot, attend over the ring.
+            slots = (write_pos + jnp.arange(S, dtype=jnp.int32)) % cache_len
+            k_c = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+            v_c = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+            slot_pos = cache["slot_pos"].at[slots].set(
+                write_pos + jnp.arange(S, dtype=jnp.int32))
+            new_cache = {"k": k_c, "v": v_c, "slot_pos": slot_pos}
+            k_att, v_att = k_c, v_c
+            pos_k = jnp.broadcast_to(slot_pos[None], (B, cache_len))
+    else:
+        k_att, v_att = k, v
+        pos_k = (kv_positions if kv_positions is not None else
+                 (positions if kv_x is None else
+                  jnp.broadcast_to(
+                      jnp.arange(src.shape[1], dtype=jnp.int32)[None],
+                      (B, src.shape[1]))))
+
+    if cfg.seq_parallel_attn and cache is None and S > 1:
+        # context parallelism: queries sharded over `model`, K/V gathered.
+        # Avoids the partial-head resharding all-reduces when n_heads
+        # doesn't divide the TP axis (DESIGN.md §Perf, llama4 cell).
+        q = constrain_seq(q, 1)
+        mask_src = constrain_seq(positions, 1)
+        out = _sdpa_block(
+            q, k_att.astype(q.dtype), v_att.astype(q.dtype),
+            _full_mask(mask_src, pos_k, causal=causal and kv_x is None,
+                       window=window), cfg.q_group, cfg.attn_scores_bf16)
+        out = constrain_batch(out)  # gather S back before the TP wo
+    else:
+        out = sdpa(q, k_att.astype(q.dtype), v_att.astype(q.dtype),
+                   positions, pos_k, causal=causal and kv_x is None,
+                   window=window, q_group=cfg.q_group,
+                   scores_bf16=cfg.attn_scores_bf16)
+    out = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"] + p.get("bo", 0.0)
+    return out.astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — minicpm3 family
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg: TransformerConfig) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    H = cfg.n_heads
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": dense_init(k1, (d, m.q_lora_rank)),
+        "q_a_norm": {"scale": jnp.zeros((m.q_lora_rank,))},
+        "wq_b": dense_init(k2, (m.q_lora_rank, H * qd)),
+        # joint latent: compressed kv + decoupled rope key
+        "wkv_a": dense_init(k3, (d, m.kv_lora_rank + m.rope_head_dim)),
+        "kv_a_norm": {"scale": jnp.zeros((m.kv_lora_rank,))},
+        "wkv_b": dense_init(
+            k4, (m.kv_lora_rank, H * (m.nope_head_dim + m.v_head_dim))),
+        "wo": dense_init(k5, (H * m.v_head_dim, d)),
+    }
+
+
+def init_mla_cache(cfg: TransformerConfig, batch: int, cache_len: int,
+                   dtype=None):
+    m = cfg.mla
+    dtype = dtype or cfg.dtype
+    return {
+        "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.rope_head_dim), dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def mla_forward(
+    p: dict,
+    x,
+    *,
+    cfg: TransformerConfig,
+    positions,
+    cache: dict | None = None,
+    write_pos=None,
+    window: int | None = None,
+):
+    """MLA with latent cache: only (ckv, k_rope) are cached — the paper's
+    memory-dominance lens applied to decode (cache bytes shrink ~8x vs MHA).
+    """
+    m = cfg.mla
+    H = cfg.n_heads
+    B, S = x.shape[0], x.shape[1]
+
+    q = x @ p["wq_a"]
+    q = rms_norm(q, p["q_a_norm"]["scale"], cfg.norm_eps)
+    q = (q @ p["wq_b"]).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+
+    kv = x @ p["wkv_a"]  # (B,S, kv_lora + rope)
+    ckv = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"]["scale"],
+                   cfg.norm_eps)
+    k_rope_in = kv[..., m.kv_lora_rank:]  # (B,S,rope_dim) single shared head
+
+    cos, sin = make_rope(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope_in[:, :, None, :], cos, sin)[:, :, 0]
+
+    new_cache = cache
+    if cache is not None:
+        cache_len = cache["ckv"].shape[1]
+        slots = (write_pos + jnp.arange(S, dtype=jnp.int32)) % cache_len
+        ckv_c = cache["ckv"].at[:, slots].set(ckv.astype(cache["ckv"].dtype))
+        kr_c = cache["k_rope"].at[:, slots].set(
+            k_rope.astype(cache["k_rope"].dtype))
+        slot_pos = cache["slot_pos"].at[slots].set(
+            write_pos + jnp.arange(S, dtype=jnp.int32))
+        new_cache = {"ckv": ckv_c, "k_rope": kr_c, "slot_pos": slot_pos}
+        ckv_att, kr_att = ckv_c.astype(x.dtype), kr_c.astype(x.dtype)
+        pos_k = jnp.broadcast_to(slot_pos[None], (B, cache_len))
+    else:
+        ckv_att, kr_att = ckv, k_rope
+        pos_k = positions
+
+    # expand latent -> per-head K_nope and V
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H,
+                               m.nope_head_dim + m.v_head_dim)
+    k_nope = jnp.einsum("btc,chd->bthd", ckv_att, wkv_b[..., :m.nope_head_dim])
+    v = jnp.einsum("btc,chd->bthd", ckv_att, wkv_b[..., m.nope_head_dim:])
+
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+
+    def block(qn_c, qr_c, pos_c):
+        scores = (jnp.einsum("bshd,bthd->bhst", qn_c, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshd,btd->bhst", qr_c, kr_att,
+                               preferred_element_type=jnp.float32)) * scale
+        mask = _full_mask(pos_c, pos_k, causal=True, window=window)
+        scores = scores + mask
+        w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(
+            x.dtype)
+        return jnp.einsum("bhst,bthd->bshd", w, v,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+
+    chunk = SDPA_CHUNK
+    if S <= chunk or S % chunk != 0:
+        out = block(q_nope, q_rope, positions)
+    else:
+        nc = S // chunk
+        qns = jnp.moveaxis(
+            q_nope.reshape(B, nc, chunk, H, m.nope_head_dim), 1, 0)
+        qrs = jnp.moveaxis(
+            q_rope.reshape(B, nc, chunk, H, m.rope_head_dim), 1, 0)
+        pss = jnp.moveaxis(positions.reshape(B, nc, chunk), 1, 0)
+
+        def body(_, args):
+            return None, block(*args)
+
+        _, outs = jax.lax.scan(body, None, (qns, qrs, pss))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, m.v_head_dim)
+    out = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    return out.astype(x.dtype), new_cache

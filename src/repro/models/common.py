@@ -1,0 +1,429 @@
+"""Shared building blocks + config schema for the LM model zoo.
+
+Ten assigned architectures share one parameterized decoder stack
+(``repro.models.transformer``) plus family-specific blocks (MoE, MLA,
+Mamba2, RWKV6, enc-dec). Parameters are plain nested dicts; every leaf
+has an entry in the LOGICAL-AXIS registry below, which the partitioner
+(repro.distributed.partition) resolves to mesh PartitionSpecs. Models are
+pure functions: ``init(key, cfg)`` / ``apply(params, batch, cfg)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig", "TransformerConfig",
+    "rms_norm", "layer_norm", "make_rope", "apply_rope", "apply_mrope",
+    "cross_entropy_loss", "AXES", "axes_of", "dense_init",
+]
+
+# --------------------------------------------------------------------------
+# Config schema
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False      # llama4: always-on shared expert
+    router_aux_weight: float = 0.01  # load-balance loss
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    rope_head_dim: int = 32
+    nope_head_dim: int = 64
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128  # SSD chunked-scan block length
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    gate_lora: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    # --- attention pattern ---
+    block_kind: str = "attn"                  # attn | mamba2 | rwkv6
+    sliding_window: int | None = None         # SWA width for local layers
+    global_every: int | None = None           # every k-th layer is global
+    rope_theta: float = 10_000.0
+    mrope: bool = False                       # qwen2-vl 3D rope
+    shared_attn_every: int | None = None      # zamba2 shared block period
+    # --- family-specific blocks ---
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    rwkv: RWKVConfig | None = None
+    # --- misc ---
+    qk_norm: bool = False                     # gemma3-style q/k RMSNorm
+    attn_bias: bool = False                   # whisper uses biased projections
+    mlp_kind: str = "swiglu"                  # swiglu | geglu | gelu
+    norm_eps: float = 1e-6
+    embed_scale: bool = False                 # gemma: x *= sqrt(d)
+    tie_embeddings: bool = False
+    frontend: str = "tokens"                  # tokens | embeddings
+    dtype: Any = jnp.bfloat16
+    # long-context capability flag (set for SWA/SSM/hybrid archs) — decides
+    # whether the long_500k cell runs (DESIGN.md §4)
+    subquadratic: bool = False
+    # §Perf lever: context-parallel attention (queries sharded over the
+    # model axis). Used when n_heads doesn't divide the TP axis (llama4).
+    seq_parallel_attn: bool = False
+    # §Perf lever (cell A forward path): explicit shard_map expert
+    # parallelism — experts on data-axis rows, one all_to_all each way,
+    # ffn TP over model. Requires n_experts % data-axis == 0 (llama4);
+    # ineligible configs fall back to the dense dispatch transparently.
+    moe_ep: bool = False
+    # §Perf lever (cell C): split decode caches by layer kind — windowed
+    # layers get ring caches of `sliding_window` slots, only the global
+    # layers keep full-context caches. Without it gemma3's 5:1 local:
+    # global pattern allocates 48 full 500k-token caches (49 GiB/device —
+    # does not fit); with it, 40 of 48 shrink to 1024 slots. Requires a
+    # regular pattern: L % global_every == 0, globals at k*global_every-1.
+    split_cache: bool = False
+    # §Perf lever: store attention scores in bf16 (T5X-style attn-logits-
+    # in-bf16): halves the O(S*T) score traffic, softmax still reduces in
+    # f32 inside the fusion. Quantizes logits to ~3 decimal digits.
+    attn_scores_bf16: bool = False
+    # §Perf lever: activation-checkpoint policy for the layer scan.
+    #   "nothing"  — recompute everything in bwd (min live memory)
+    #   "attn_out" — save attention outputs (skips recomputing the O(S^2)
+    #                score matmuls in bwd; +16 MB/layer/microbatch live)
+    #   "dots"     — XLA dots_saveable (max save, min recompute)
+    remat_policy: str = "nothing"
+    # §Perf lever: pad the embedding/unembedding vocab dim to a multiple
+    # (Megatron-style) so it shards over the model axis. Archs whose vocab
+    # doesn't divide the 16-way axis (granite-3: 49155, minicpm3: 73448,
+    # whisper: 51866) otherwise REPLICATE every (B,S,V) f32 logits/softmax
+    # buffer per device. Padded logits are masked to -inf in _unembed.
+    vocab_pad_to: int | None = None
+
+    @property
+    def padded_vocab(self) -> int:
+        if not self.vocab_pad_to:
+            return self.vocab_size
+        m = self.vocab_pad_to
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_group(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives 6ND roofline maths)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.block_kind == "rwkv6" and self.rwkv:
+            att = d * d * 4 + d * (self.rwkv.decay_lora * 2
+                                   + self.rwkv.gate_lora * 2) + 6 * d
+        elif self.mla:
+            m = self.mla
+            att = (d * m.q_lora_rank
+                   + m.q_lora_rank * self.n_heads
+                   * (m.nope_head_dim + m.rope_head_dim)
+                   + d * (m.kv_lora_rank + m.rope_head_dim)
+                   + m.kv_lora_rank * self.n_heads
+                   * (m.nope_head_dim + m.v_head_dim)
+                   + self.n_heads * m.v_head_dim * d)
+        else:
+            att = d * (self.n_heads * hd) * 2 + d * (
+                self.n_kv_heads * hd) * 2
+        if self.moe:
+            gates = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+            mlp = self.moe.n_experts * gates * d * f + d * self.moe.n_experts
+            if self.moe.shared_expert:
+                mlp += gates * d * f
+        else:
+            gates = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+            mlp = gates * d * f
+        if self.block_kind == "mamba2" and self.ssm:
+            din = self.ssm.expand * d
+            nh = din // self.ssm.head_dim
+            att = 0
+            mlp_ssm = (d * (2 * din + 2 * self.ssm.d_state + nh)
+                       + din * d + din * self.ssm.d_conv + 2 * nh)
+            mlp = mlp_ssm + mlp  # zamba-style models add their own MLP? no:
+            mlp = mlp_ssm if self.moe is None and self.mlp_kind == "none" \
+                else mlp_ssm + gates * d * f
+        return emb + L * (att + mlp + 2 * d) + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        gates = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+        total = self.param_count()
+        expert_params = self.moe.n_experts * gates * d * f * self.n_layers
+        active_expert = self.moe.top_k * gates * d * f * self.n_layers
+        return total - expert_params + active_expert
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0) -> jnp.ndarray:
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std)
+
+
+def _rms_norm_fwd_math(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1,
+                                 keepdims=True) + eps)
+    y = xf * inv * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm: f32 math INSIDE, input-dtype tensors at the boundaries.
+
+    The custom VJP keeps the backward's boundary cotangents in the input
+    dtype (bf16): with the default VJP the f32 upcast chain leaks f32
+    residual-stream cotangents across fusion boundaries — measured as THE
+    dominant HBM-traffic term in the train cells (§Perf cell B, hypothesis
+    B3: ~4.4 TB/device/step of f32[.,S,d] fusion traffic on granite-3).
+    Numerics are unchanged: every internal reduction still runs in f32.
+    """
+    return _rms_norm_fwd_math(x, scale, eps)
+
+
+def _rms_norm_fwd(x, scale, eps):
+    return _rms_norm_fwd_math(x, scale, eps), (x, scale)
+
+
+def _rms_norm_bwd(eps, res, g):
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1,
+                                 keepdims=True) + eps)
+    xn = xf * inv
+    a = 1.0 + scale.astype(jnp.float32)
+    ag = a * gf
+    dscale = jnp.sum((gf * xn).reshape(-1, x.shape[-1]), axis=0)
+    dx = inv * (ag - xn * jnp.mean(ag * xn, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def make_rope(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> (cos, sin) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, head_dim: int, theta: float,
+                sections=(1, 1, 2)):
+    """Qwen2-VL multimodal RoPE: positions3 (3, B, S) = (t, h, w) ids.
+
+    head_dim//2 rotary freqs are split across the three position streams in
+    ratio ``sections`` (temporal gets the low-frequency end).
+    """
+    half = head_dim // 2
+    total = sum(sections)
+    bounds = np.cumsum([0] + [half * s // total for s in sections])
+    bounds[-1] = half
+    cos_parts, sin_parts = [], []
+    for i in range(3):
+        lo, hi = int(bounds[i]), int(bounds[i + 1])
+        freqs = 1.0 / (theta ** (jnp.arange(lo, hi, dtype=jnp.float32)
+                                 / half))
+        ang = positions3[i].astype(jnp.float32)[..., None] * freqs
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+    cos = jnp.concatenate(cos_parts, axis=-1)  # (B, S, half)
+    sin = jnp.concatenate(sin_parts, axis=-1)
+    return apply_rope(x, cos, sin)
+
+
+def cross_entropy_loss(logits, targets, z_weight: float = 1e-4):
+    """Token-mean CE + z-loss (stabilizes the sharded softmax).
+
+    The gold logit is extracted with a one-hot einsum, NOT take_along_axis:
+    the gather's backward is a scatter over the vocab axis, which GSPMD
+    replicates (a 12 GiB/device f32 buffer at batch 256 x 4k x 49k vocab).
+    The einsum's backward is elementwise and keeps the batch sharding.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    ce = jnp.mean(logz - gold)
+    zl = z_weight * jnp.mean(jnp.square(logz))
+    return ce + zl, {"ce": ce, "z_loss": zl}
+
+
+# --------------------------------------------------------------------------
+# Logical-axis registry: leaf path suffix -> logical axes (no stacked dim;
+# the partitioner prepends "layers" when leaf rank == len(axes)+1).
+# --------------------------------------------------------------------------
+
+AXES: dict[str, tuple[str | None, ...]] = {
+    # embeddings / head
+    "embed/table": ("vocab", "embed"),
+    "unembed/table": ("embed", "vocab"),
+    "final_norm/scale": (None,),
+    # attention
+    "attn/wq": ("embed", "heads"),
+    "attn/wk": ("embed", "kv"),
+    "attn/wv": ("embed", "kv"),
+    "attn/wo": ("heads", "embed"),
+    "attn/q_norm/scale": (None,),
+    "attn/k_norm/scale": (None,),
+    # MLA
+    "attn/wq_a": ("embed", None),
+    "attn/wq_b": (None, "heads"),
+    "attn/wkv_a": ("embed", None),
+    "attn/wkv_b": (None, "heads"),
+    "attn/q_a_norm/scale": (None,),
+    "attn/kv_a_norm/scale": (None,),
+    # dense MLP
+    "mlp/w_gate": ("embed", "ffn"),
+    "mlp/w_up": ("embed", "ffn"),
+    "mlp/w_down": ("ffn", "embed"),
+    # MoE. The router is tiny (d x E) — replicate it: sharding its embed
+    # dim over data makes the routing matmul contract a sharded dim and
+    # all-reduce (T, E) f32 per layer (§Perf cell A, hypothesis A5).
+    "moe/router": (None, None),
+    "moe/w_gate": ("expert", "embed", "ffn"),
+    "moe/w_up": ("expert", "embed", "ffn"),
+    "moe/w_down": ("expert", "ffn", "embed"),
+    "moe/shared_w_gate": ("embed", "ffn"),
+    "moe/shared_w_up": ("embed", "ffn"),
+    "moe/shared_w_down": ("ffn", "embed"),
+    # mamba2
+    "ssm/in_proj": ("embed", "ffn"),
+    "ssm/out_proj": ("ffn", "embed"),
+    "ssm/conv_w": (None, "ffn"),
+    "ssm/A_log": ("ffn",),
+    "ssm/D": ("ffn",),
+    "ssm/dt_bias": ("ffn",),
+    "ssm/norm/scale": ("ffn",),
+    # rwkv6
+    "rwkv/wr": ("embed", "heads"),
+    "rwkv/wk": ("embed", "heads"),
+    "rwkv/wv": ("embed", "heads"),
+    "rwkv/wg": ("embed", "heads"),
+    "rwkv/wo": ("heads", "embed"),
+    "rwkv/decay_a": ("embed", None),
+    "rwkv/decay_b": (None, "heads"),
+    "rwkv/mix": (None, "embed"),
+    "rwkv/u": ("heads",),
+    "rwkv/ln_x/scale": ("heads",),
+    "rwkv/wk_mlp": ("embed", "ffn"),
+    "rwkv/wv_mlp": ("ffn", "embed"),
+    "rwkv/wr_mlp": ("embed", None),
+    # norms inside blocks
+    "pre_norm/scale": (None,),
+    "post_norm/scale": (None,),
+    "pre_mlp_norm/scale": (None,),
+    # layer norms with bias (whisper)
+    "pre_norm/bias": (None,),
+    "post_norm/bias": (None,),
+    "final_norm/bias": (None,),
+    # whisper cross-attn
+    "xattn/wq": ("embed", "heads"),
+    "xattn/wk": ("embed", "kv"),
+    "xattn/wv": ("embed", "kv"),
+    "xattn/wo": ("heads", "embed"),
+    "pre_xattn_norm/scale": (None,),
+    "pre_xattn_norm/bias": (None,),
+    # whisper biases
+    "attn/bq": ("heads",),
+    "attn/bv": ("kv",),
+    "attn/bo": (None,),
+    "xattn/bq": ("heads",),
+    "xattn/bv": ("kv",),
+    "xattn/bo": (None,),
+    "mlp/b_up": ("ffn",),
+    "mlp/b_down": (None,),
+    # positional embeddings (whisper)
+    "pos_embed/table": (None, "embed"),
+    # zamba2 lora adapters on the shared block
+    "lora_a": ("embed", None),
+    "lora_b": (None, "heads"),
+}
+
+
+def axes_of(path: str, leaf) -> tuple[str | None, ...]:
+    """Resolve logical axes for a leaf by longest-suffix match in AXES."""
+    parts = path.split("/")
+    for take in range(min(3, len(parts)), 0, -1):
+        suffix = "/".join(parts[-take:])
+        if suffix in AXES:
+            axes = AXES[suffix]
+            if leaf.ndim == len(axes) + 1:
+                return ("layers",) + tuple(axes)
+            if leaf.ndim == len(axes):
+                return tuple(axes)
+    # sane default: replicate
+    return (None,) * leaf.ndim

@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) block — zamba2's backbone.
+
+Selective state-space with scalar-per-head decay (the SSD formulation):
+
+    dt_t   = softplus(dt_raw_t + dt_bias)            (B, nh)
+    dA_t   = exp(-exp(A_log) * dt_t)                 (B, nh)
+    state  = dA_t * state + (x_t * dt_t) outer B_t   (B, nh, hd, ds)
+    y_t    = state . C_t + D * x_t
+
+Two execution paths sharing one parameterization:
+  * ``mamba2_scan``  — sequential lax.scan over time (train/prefill
+    baseline; exact).
+  * ``mamba2_step``  — single-token decode with carried (conv, ssm) state.
+
+A chunked (block-parallel) SSD variant is a §Perf candidate; the scan is
+the correctness oracle for it.
+
+Conceptual kinship with the paper (DESIGN.md §4): the LIF membrane update
+V' = decay*V + input IS a degenerate (non-selective, scalar-state) SSM;
+Mamba2's learned, input-dependent dA generalizes Cerebra's fixed shift
+decay.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import SSMConfig, TransformerConfig, dense_init, rms_norm
+
+__all__ = ["init_mamba2", "mamba2_scan", "mamba2_step", "init_mamba2_cache"]
+
+
+def _dims(cfg: TransformerConfig):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def init_mamba2(key, cfg: TransformerConfig) -> dict:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # in_proj emits [z, x, B, C, dt]
+    out_width = 2 * d_in + 2 * s.d_state + nh
+    return {
+        "in_proj": dense_init(k1, (cfg.d_model, out_width)),
+        "conv_w": dense_init(k2, (s.d_conv, conv_dim)),
+        "A_log": jnp.zeros((nh,)),
+        "D": jnp.ones((nh,)),
+        "dt_bias": jnp.zeros((nh,)),
+        "norm": {"scale": jnp.zeros((d_in,))},
+        "out_proj": dense_init(k3, (d_in, cfg.d_model)),
+    }
+
+
+def init_mamba2_cache(cfg: TransformerConfig, batch: int, dtype=None):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    dtype = dtype or cfg.dtype
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _split(cfg, zxbcdt):
+    s, d_in, nh, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xc = zxbcdt[..., d_in: 2 * d_in + 2 * s.d_state]  # conv input [x,B,C]
+    dt = zxbcdt[..., 2 * d_in + 2 * s.d_state:]
+    return z, xc, dt
+
+
+def _post(cfg, p, y, z, x):
+    _, d_in, _, _ = _dims(cfg)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"]["scale"], cfg.norm_eps)
+    return (y @ p["out_proj"].astype(y.dtype)).astype(x.dtype)
+
+
+def mamba2_scan(p: dict, x, *, cfg: TransformerConfig,
+                return_cache: bool = False):
+    """x: (B, S, d_model) -> (out, cache|None). Causal depthwise conv +
+    sequential SSD scan."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xc, dt_raw = _split(cfg, zxbcdt)
+
+    # causal depthwise conv over time
+    pad = jnp.zeros((B, s.d_conv - 1, conv_dim), xc.dtype)
+    xc_p = jnp.concatenate([pad, xc], axis=1)
+    conv_w = p["conv_w"].astype(xc.dtype)
+    xc_conv = sum(
+        xc_p[:, i: i + S] * conv_w[i][None, None] for i in range(s.d_conv))
+    xc_conv = jax.nn.silu(xc_conv)
+    xs = xc_conv[..., :d_in].reshape(B, S, nh, s.head_dim)
+    Bt = xc_conv[..., d_in: d_in + s.d_state]
+    Ct = xc_conv[..., d_in + s.d_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    dA = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)
+
+    def step(state, inputs):
+        xs_t, b_t, c_t, dA_t, dt_t = inputs
+        upd = jnp.einsum("bhd,bs->bhds",
+                         xs_t.astype(jnp.float32)
+                         * dt_t[..., None], b_t.astype(jnp.float32))
+        state = dA_t[..., None, None] * state + upd
+        y_t = jnp.einsum("bhds,bs->bhd", state, c_t.astype(jnp.float32))
+        return state, y_t
+
+    state0 = jnp.zeros((B, nh, s.head_dim, s.d_state), jnp.float32)
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    b_t = jnp.moveaxis(Bt, 1, 0)
+    c_t = jnp.moveaxis(Ct, 1, 0)
+    dA_t = jnp.moveaxis(dA, 1, 0)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    state, ys = jax.lax.scan(step, state0, (xs_t, b_t, c_t, dA_t, dt_t))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,nh,hd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    out = _post(cfg, p, y, z, x)
+    if return_cache:
+        tail = xc[:, -(s.d_conv - 1):] if S >= s.d_conv - 1 else (
+            jnp.concatenate([pad, xc], axis=1)[:, -(s.d_conv - 1):])
+        return out, {"conv": tail, "ssm": state}
+    return out, None
+
+
+def mamba2_step(p: dict, x, cache: dict, *, cfg: TransformerConfig):
+    """Single-token decode. x: (B, 1, d_model)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(x.dtype)  # (B, width)
+    z, xc, dt_raw = _split(cfg, zxbcdt[:, None, :])
+    z, xc, dt_raw = z[:, 0], xc[:, 0], dt_raw[:, 0]
+
+    conv_hist = jnp.concatenate([cache["conv"].astype(xc.dtype),
+                                 xc[:, None]], axis=1)  # (B, d_conv, cd)
+    conv_w = p["conv_w"].astype(xc.dtype)
+    xc_conv = jax.nn.silu(jnp.einsum("btc,tc->bc", conv_hist, conv_w))
+    new_conv = conv_hist[:, 1:]
+
+    xs = xc_conv[:, :d_in].reshape(B, nh, s.head_dim)
+    b_t = xc_conv[:, d_in: d_in + s.d_state]
+    c_t = xc_conv[:, d_in + s.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,nh)
+    dA = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)
+
+    state = cache["ssm"]
+    upd = jnp.einsum("bhd,bs->bhds", xs.astype(jnp.float32) * dt[..., None],
+                     b_t.astype(jnp.float32))
+    state = dA[..., None, None] * state + upd
+    y = jnp.einsum("bhds,bs->bhd", state, c_t.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, d_in).astype(x.dtype)
+    out = _post(cfg, p, y[:, None], z[:, None], x)
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,181 @@
+"""RWKV-6 "Finch" block — attention-free token mixing with data-dependent
+decay (the assigned rwkv6-7b backbone).
+
+Per head (k-dim x v-dim state S):
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        w_t = exp(-exp(decay(x_t)))
+
+``decay(x)`` is the low-rank data-dependent decay (the "Finch" novelty).
+Decode carries (S, prev-token shift states) — O(1) per token in context
+length, which is why rwkv6 runs the long_500k cell.
+
+DESIGN.md §4 kinship: w_t is a learned, per-channel generalization of the
+Cerebra-H shift-decay leak; state update and LIF update share the same
+decay+integrate skeleton.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import RWKVConfig, TransformerConfig, dense_init
+
+__all__ = ["init_rwkv6", "rwkv6_scan", "rwkv6_step", "init_rwkv6_cache",
+           "init_rwkv6_ffn", "rwkv6_ffn", "rwkv6_ffn_step"]
+
+
+def _dims(cfg: TransformerConfig):
+    r: RWKVConfig = cfg.rwkv
+    nh = cfg.d_model // r.head_dim
+    return r, nh, r.head_dim
+
+
+def init_rwkv6(key, cfg: TransformerConfig) -> dict:
+    r, nh, hd = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "wr": dense_init(ks[0], (d, d)),
+        "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)),
+        "wg": dense_init(ks[3], (d, d)),
+        "wo": dense_init(ks[4], (d, d)),
+        "decay_a": dense_init(ks[5], (d, r.decay_lora)),
+        "decay_b": dense_init(ks[6], (r.decay_lora, d)) * 0.1,
+        "mix": jax.random.uniform(ks[7], (5, d)),  # r,k,v,g,w shift mixes
+        "u": jnp.zeros((nh, hd)),
+        "ln_x": {"scale": jnp.zeros((d,))},
+    }
+
+
+def init_rwkv6_ffn(key, cfg: TransformerConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wk_mlp": dense_init(k1, (d, f)),
+        "wv_mlp": dense_init(k2, (f, d)),
+        "wr_mlp": dense_init(k3, (d, d)),
+        "mix": jax.random.uniform(jax.random.fold_in(key, 9), (2, d)),
+    }
+
+
+def init_rwkv6_cache(cfg: TransformerConfig, batch: int, dtype=None):
+    r, nh, hd = _dims(cfg)
+    dtype = dtype or cfg.dtype
+    return {
+        "state": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "x_att": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_ffn": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def _mix(x, x_prev, m):
+    return x + (x_prev - x) * m[None, None]
+
+
+def _decay(p, xw):
+    return jnp.exp(-jnp.exp(
+        (xw.astype(jnp.float32) @ p["decay_a"].astype(jnp.float32))
+        @ p["decay_b"].astype(jnp.float32)))
+
+
+def _group_norm(x, scale, nh, eps=1e-5):
+    """per-head layer norm of the wkv output (RWKV's ln_x)."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, nh, d // nh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, d)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rwkv6_scan(p: dict, x, *, cfg: TransformerConfig,
+               x_prev=None, return_cache: bool = False):
+    """Time-mix over a sequence. x: (B,S,d)."""
+    r, nh, hd = _dims(cfg)
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+    xr = _mix(x, shifted, p["mix"][0])
+    xk = _mix(x, shifted, p["mix"][1])
+    xv = _mix(x, shifted, p["mix"][2])
+    xg = _mix(x, shifted, p["mix"][3])
+    xw = _mix(x, shifted, p["mix"][4])
+
+    rv = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, nh, hd)
+    kv = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, nh, hd)
+    vv = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    w = _decay(p, xw).reshape(B, S, nh, hd)  # f32 decay in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,nh,hd) each
+        kv_t = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                          v_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                         state + u[None, :, :, None] * kv_t)
+        state = w_t.astype(jnp.float32)[..., None] * state + kv_t
+        return state, y_t
+
+    state0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (rv, kv, vv, w))
+    state, ys = jax.lax.scan(step, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_x"]["scale"], nh)
+    out = (y * g) @ p["wo"].astype(x.dtype)
+    if return_cache:
+        return out, {"state": state, "x_att": x[:, -1]}
+    return out, None
+
+
+def rwkv6_step(p: dict, x, cache: dict, *, cfg: TransformerConfig):
+    """Single-token decode. x: (B,1,d)."""
+    r, nh, hd = _dims(cfg)
+    B, _, d = x.shape
+    shifted = cache["x_att"][:, None]
+    xr = _mix(x, shifted, p["mix"][0])
+    xk = _mix(x, shifted, p["mix"][1])
+    xv = _mix(x, shifted, p["mix"][2])
+    xg = _mix(x, shifted, p["mix"][3])
+    xw = _mix(x, shifted, p["mix"][4])
+    r_t = (xr @ p["wr"].astype(x.dtype)).reshape(B, nh, hd)
+    k_t = (xk @ p["wk"].astype(x.dtype)).reshape(B, nh, hd)
+    v_t = (xv @ p["wv"].astype(x.dtype)).reshape(B, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))[:, 0]
+    w_t = _decay(p, xw).reshape(B, nh, hd)
+    u = p["u"].astype(jnp.float32)
+    state = cache["state"]
+    kv_t = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                      v_t.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                   state + u[None, :, :, None] * kv_t)
+    state = w_t.astype(jnp.float32)[..., None] * state + kv_t
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_x"]["scale"], nh)
+    out = ((y[:, 0] * g) @ p["wo"].astype(x.dtype))[:, None]
+    return out, {"state": state, "x_att": x[:, 0]}
+
+
+def rwkv6_ffn(p: dict, x, *, x_prev=None):
+    """Channel mix. x: (B,S,d)."""
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = _mix(x, shifted, p["mix"][0])
+    xr = _mix(x, shifted, p["mix"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["wk_mlp"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["wr_mlp"].astype(x.dtype))
+    return r * (k @ p["wv_mlp"].astype(x.dtype))
+
+
+def rwkv6_ffn_step(p: dict, x, x_prev):
+    """x: (B,1,d); x_prev: (B,d) -> (out, new_x_prev)."""
+    out = rwkv6_ffn(p, x, x_prev=x_prev)
+    return out, x[:, 0]

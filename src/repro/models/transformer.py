@@ -1,0 +1,402 @@
+"""Decoder-only LM stack parameterized over the assigned families.
+
+One module covers: mixtral (SWA+MoE), llama4-scout (MoE), gemma3
+(local:global), granite-20b (MQA), minicpm3 (MLA), granite-3 (GQA),
+qwen2-vl (M-RoPE, embedding frontend), rwkv6 (attention-free) and the
+mamba2 backbone used by zamba2 (the zamba2 hybrid wrapper lives in
+zamba2.py; whisper's enc-dec lives in whisper.py).
+
+Homogeneous stacks are ``lax.scan``-stacked (one layer body in HLO —
+bounded compile time at 48 layers x 512 devices). Per-layer heterogeneity
+(gemma3's 5:1 local:global) is expressed as a scanned int32 ``window``
+vector (0 = full attention) so a single code path serves both layer kinds.
+
+Three entry points share the layer body:
+  * ``forward``      — teacher-forced logits (train / eval)
+  * ``prefill``      — forward + populate KV caches, return last logits
+  * ``decode_step``  — one token with stacked caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.partition import constrain_batch
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.common import (
+    TransformerConfig, cross_entropy_loss, dense_init, rms_norm,
+)
+
+__all__ = ["DecoderLM", "init_mlp", "mlp_forward"]
+
+
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg: TransformerConfig, *, bias: bool = False) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d, f)),
+            "w_up": dense_init(k2, (d, f)),
+            "w_down": dense_init(k3, (f, d)),
+        }
+    p = {"w_up": dense_init(k1, (d, f)), "w_down": dense_init(k2, (f, d))}
+    if bias:
+        p["b_up"] = jnp.zeros((f,))
+        p["b_down"] = jnp.zeros((d,))
+    return p
+
+
+def mlp_forward(p: dict, x, cfg: TransformerConfig):
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"].astype(x.dtype)) * (
+            x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p.get("b_up", 0.0))
+    return h @ p["w_down"].astype(x.dtype) + p.get("b_down", 0.0)
+
+
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DecoderLM:
+    cfg: TransformerConfig
+
+    # ---------------- parameters ----------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_embed, k_layers, k_out = jax.random.split(key, 3)
+        params: dict = {
+            "embed": {"table": dense_init(k_embed,
+                                          (cfg.padded_vocab, cfg.d_model))},
+            "final_norm": {"scale": jnp.zeros((cfg.d_model,))},
+        }
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        stacked = jax.vmap(self._layer_init)(layer_keys)
+        params["layers"] = stacked
+        if not cfg.tie_embeddings:
+            params["unembed"] = {
+                "table": dense_init(k_out, (cfg.d_model, cfg.padded_vocab))}
+        return jax.tree.map(lambda x: x.astype(cfg.dtype), params)
+
+    def _layer_init(self, key) -> dict:
+        cfg = self.cfg
+        k_attn, k_mlp = jax.random.split(key)
+        layer: dict = {"pre_norm": {"scale": jnp.zeros((cfg.d_model,))},
+                       "pre_mlp_norm": {"scale": jnp.zeros((cfg.d_model,))}}
+        if cfg.block_kind == "attn":
+            if cfg.mla is not None:
+                layer["attn"] = attn.init_mla(k_attn, cfg)
+            else:
+                layer["attn"] = attn.init_gqa(k_attn, cfg,
+                                              bias=cfg.attn_bias)
+            layer["moe" if cfg.moe else "mlp"] = (
+                moe_mod.init_moe(k_mlp, cfg) if cfg.moe
+                else init_mlp(k_mlp, cfg))
+        elif cfg.block_kind == "mamba2":
+            layer["ssm"] = m2.init_mamba2(k_attn, cfg)
+            del layer["pre_mlp_norm"]  # mamba2 block has no separate MLP
+        elif cfg.block_kind == "rwkv6":
+            layer["rwkv"] = rk.init_rwkv6(k_attn, cfg)
+            layer["ffn"] = rk.init_rwkv6_ffn(k_mlp, cfg)
+        else:
+            raise ValueError(cfg.block_kind)
+        return layer
+
+    # ---------------- layer schedule ----------------
+    def layer_windows(self) -> np.ndarray:
+        """(L,) int32 attention window per layer; 0 = full attention."""
+        cfg = self.cfg
+        w = np.zeros(cfg.n_layers, np.int32)
+        if cfg.sliding_window:
+            w[:] = cfg.sliding_window
+            if cfg.global_every:
+                w[cfg.global_every - 1::cfg.global_every] = 0
+        return w
+
+    def cache_len(self, seq_len: int) -> int:
+        """Uniform per-layer cache length (baseline; §Perf explores
+        per-kind split caches). Ring-buffer caches shrink to the window
+        when EVERY layer is windowed."""
+        cfg = self.cfg
+        w = self.layer_windows()
+        if cfg.sliding_window and (w > 0).all():
+            return min(seq_len, int(w.max()))
+        return seq_len
+
+    # ---------------- caches ----------------
+    def _split_geometry(self):
+        """(n_groups, locals_per_group) for the split-cache layout."""
+        cfg = self.cfg
+        g = cfg.global_every
+        assert cfg.split_cache and cfg.sliding_window and g
+        assert cfg.n_layers % g == 0, "split_cache needs a regular pattern"
+        w = self.layer_windows()
+        per = w.reshape(-1, g)
+        assert (per[:, :-1] > 0).all() and (per[:, -1] == 0).all(), (
+            "split_cache expects [local x (g-1), global] groups")
+        return cfg.n_layers // g, g - 1
+
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+
+        def one_attn(clen):
+            def f(_):
+                if cfg.mla is not None:
+                    return attn.init_mla_cache(cfg, batch, clen)
+                return attn.init_gqa_cache(cfg, batch, clen)
+            return f
+
+        if (cfg.split_cache and cfg.block_kind == "attn"
+                and cfg.sliding_window and cfg.global_every):
+            G, nloc = self._split_geometry()
+            w = int(cfg.sliding_window)
+            return {
+                # (G, nloc, ...) ring caches for the windowed layers
+                "local": jax.vmap(jax.vmap(one_attn(min(seq_len, w))))(
+                    jnp.zeros((G, nloc))),
+                # (G, ...) full caches only for the global layers
+                "global": jax.vmap(one_attn(seq_len))(jnp.zeros((G,))),
+            }
+
+        L = cfg.n_layers
+        clen = self.cache_len(seq_len)
+
+        def one(_):
+            if cfg.block_kind == "attn":
+                return one_attn(clen)(None)
+            if cfg.block_kind == "mamba2":
+                return m2.init_mamba2_cache(cfg, batch)
+            return rk.init_rwkv6_cache(cfg, batch)
+
+        return jax.vmap(one)(jnp.arange(L))
+
+    # ---------------- core ----------------
+    def _embed(self, params, batch_in):
+        cfg = self.cfg
+        if cfg.frontend == "embeddings" and "embeds" in batch_in:
+            # stub modality frontend supplies merged patch/frame embeddings
+            # at prefill; decode falls through to the token table below
+            x = batch_in["embeds"].astype(cfg.dtype)
+        else:
+            x = jnp.take(params["embed"]["table"], batch_in["tokens"],
+                         axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+        return constrain_batch(x)
+
+    def _layer_body(self, x, layer_p, window, cache, write_pos, positions,
+                    mrope_positions):
+        """One block; cache may be None. Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.block_kind == "attn":
+            h = rms_norm(x, layer_p["pre_norm"]["scale"], cfg.norm_eps)
+            if cfg.mla is not None:
+                a_out, new_cache = attn.mla_forward(
+                    layer_p["attn"], h, cfg=cfg, positions=positions,
+                    cache=cache, write_pos=write_pos)
+            else:
+                a_out, new_cache = attn.gqa_forward(
+                    layer_p["attn"], h, cfg=cfg, positions=positions,
+                    window=window, cache=cache, write_pos=write_pos,
+                    mrope_positions=mrope_positions)
+            a_out = jax.ad_checkpoint.checkpoint_name(a_out, "attn_out")
+            x = x + a_out
+            h = rms_norm(x, layer_p["pre_mlp_norm"]["scale"], cfg.norm_eps)
+            if cfg.moe:
+                # decode steps route droplessly (bit-exact, C=T=batch is
+                # small); train/prefill keep GShard capacity semantics
+                dropless = cache is not None and h.shape[1] == 1
+                fwd = (moe_mod.moe_forward_ep if cfg.moe_ep
+                       else moe_mod.moe_forward)
+                m_out, aux = fwd(layer_p["moe"], h, cfg, dropless=dropless)
+            else:
+                m_out = mlp_forward(layer_p["mlp"], h, cfg)
+            x = x + m_out
+        elif cfg.block_kind == "mamba2":
+            h = rms_norm(x, layer_p["pre_norm"]["scale"], cfg.norm_eps)
+            if cache is None:
+                s_out, new_cache = m2.mamba2_scan(layer_p["ssm"], h, cfg=cfg)
+            elif h.shape[1] == 1:
+                s_out, new_cache = m2.mamba2_step(layer_p["ssm"], h, cache,
+                                                  cfg=cfg)
+            else:  # prefill: scan then keep final state
+                s_out, new_cache = m2.mamba2_scan(layer_p["ssm"], h,
+                                                  cfg=cfg, return_cache=True)
+            x = x + s_out
+        elif cfg.block_kind == "rwkv6":
+            h = rms_norm(x, layer_p["pre_norm"]["scale"], cfg.norm_eps)
+            if cache is None:
+                t_out, new_cache = rk.rwkv6_scan(layer_p["rwkv"], h, cfg=cfg)
+                new_ffn_prev = None
+            elif h.shape[1] == 1:
+                t_out, tm_cache = rk.rwkv6_step(layer_p["rwkv"], h, cache,
+                                                cfg=cfg)
+                new_cache = dict(cache, **tm_cache)
+            else:
+                t_out, tm_cache = rk.rwkv6_scan(
+                    layer_p["rwkv"], h, cfg=cfg, x_prev=cache["x_att"],
+                    return_cache=True)
+                new_cache = dict(cache, **tm_cache)
+            x = x + t_out
+            h = rms_norm(x, layer_p["pre_mlp_norm"]["scale"], cfg.norm_eps)
+            if cache is None:
+                f_out = rk.rwkv6_ffn(layer_p["ffn"], h)
+            else:
+                f_out, ffn_prev = rk.rwkv6_ffn_step(
+                    layer_p["ffn"], h, new_cache["x_ffn"])
+                new_cache["x_ffn"] = h[:, -1]
+            x = x + f_out
+        else:
+            raise ValueError(cfg.block_kind)
+        if cache is None and cfg.block_kind == "attn":
+            new_cache = new_cache  # may be None
+        return x, (new_cache if cache is not None else None), aux
+
+    def _run_stack(self, params, x, positions, mrope_positions, cache,
+                   write_pos, *, remat: bool = False):
+        cfg = self.cfg
+        if (cache is not None and isinstance(cache, dict)
+                and "local" in cache):
+            return self._run_stack_split(params, x, positions, cache,
+                                         write_pos)
+        windows = jnp.asarray(self.layer_windows())
+
+        policies = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "attn_out": jax.checkpoint_policies.save_only_these_names(
+                "attn_out"),
+            "dots": jax.checkpoint_policies.dots_saveable,
+        }
+
+        def body(carry, scanned):
+            x = carry
+            layer_p, window, layer_cache = scanned
+            fn = self._layer_body
+            if remat:
+                fn = jax.checkpoint(fn, policy=policies[cfg.remat_policy])
+            x, new_cache, aux = fn(x, layer_p, window, layer_cache,
+                                   write_pos, positions, mrope_positions)
+            return x, (new_cache, aux)
+
+        scanned = (params["layers"], windows, cache)
+        x, (new_cache, auxs) = jax.lax.scan(body, x, scanned)
+        return x, new_cache, jnp.sum(auxs)
+
+    def _run_stack_split(self, params, x, positions, cache, write_pos):
+        """Split-cache decode/prefill path (§Perf cell C): scan over
+        [local x (g-1), global] layer groups; windowed layers carry ring
+        caches, global layers full caches."""
+        cfg = self.cfg
+        G, nloc = self._split_geometry()
+        w = int(cfg.sliding_window)
+
+        # reshape the stacked layer params (L, ...) -> (G, g, ...)
+        grouped = jax.tree.map(
+            lambda p: p.reshape((G, nloc + 1) + p.shape[1:]),
+            params["layers"])
+        p_local = jax.tree.map(lambda p: p[:, :nloc], grouped)
+        p_global = jax.tree.map(lambda p: p[:, nloc], grouped)
+
+        def local_body(carry, scanned):
+            x = carry
+            layer_p, layer_cache = scanned
+            x, new_cache, _ = self._layer_body(
+                x, layer_p, jnp.int32(w), layer_cache, write_pos,
+                positions, None)
+            return x, new_cache
+
+        def group_body(carry, scanned):
+            x = carry
+            pl, pg, cl, cg = scanned
+            x, new_local = jax.lax.scan(local_body, x, (pl, cl))
+            x, new_global, _ = self._layer_body(
+                x, pg, jnp.int32(0), cg, write_pos, positions, None)
+            return x, (new_local, new_global)
+
+        x, (new_local, new_global) = jax.lax.scan(
+            group_body, x,
+            (p_local, p_global, cache["local"], cache["global"]))
+        return x, {"local": new_local, "global": new_global}, jnp.zeros(
+            (), jnp.float32)
+
+    # ---------------- public entry points ----------------
+    def forward(self, params, batch_in, *, remat: bool = False):
+        """Teacher-forced logits. batch_in: {'tokens' (B,S) | 'embeds',
+        optional 'positions', 'mrope_positions'}."""
+        cfg = self.cfg
+        x = self._embed(params, batch_in)
+        B, S = x.shape[0], x.shape[1]
+        positions = batch_in.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _, aux = self._run_stack(
+            params, x, positions, batch_in.get("mrope_positions"),
+            None, None, remat=remat)
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = self._unembed(params, x)
+        return logits, aux
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        x = constrain_batch(x)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["table"].T
+        else:
+            logits = x @ params["unembed"]["table"]
+        if cfg.padded_vocab != cfg.vocab_size:
+            # mask pad columns to -inf: softmax/argmax never select them,
+            # and the mask fuses into the matmul epilogue
+            pad = jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, logits.ndim - 1) >= cfg.vocab_size
+            logits = jnp.where(pad, jnp.asarray(-2.0 ** 20, logits.dtype),
+                               logits)
+        # keep (B, S, V) batch-sharded: its cotangent is the largest f32
+        # buffer in the backward pass
+        return constrain_batch(logits)
+
+    def loss(self, params, batch_in, *, remat: bool = False):
+        logits, aux = self.forward(params, batch_in, remat=remat)
+        ce, parts = cross_entropy_loss(logits, batch_in["targets"])
+        return ce + aux, dict(parts, aux=aux)
+
+    def prefill(self, params, batch_in, cache):
+        """Populate caches; returns (last-token logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, batch_in)
+        B, S = x.shape[0], x.shape[1]
+        positions = batch_in.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_cache, _ = self._run_stack(
+            params, x, positions, batch_in.get("mrope_positions"),
+            cache, jnp.int32(0))
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return self._unembed(params, x[:, -1:]), new_cache
+
+    def decode_step(self, params, token_in, pos, cache):
+        """One decode step. token_in: {'tokens' (B,1) | 'embeds' (B,1,d)};
+        pos: scalar int32 absolute position. Returns (logits (B,1,V),
+        new_cache)."""
+        cfg = self.cfg
+        x = self._embed(params, token_in)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+        mrope = token_in.get("mrope_positions")
+        x, new_cache, _ = self._run_stack(
+            params, x, positions, mrope, cache, jnp.asarray(pos, jnp.int32))
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return self._unembed(params, x), new_cache

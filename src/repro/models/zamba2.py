@@ -1,0 +1,193 @@
+"""Zamba2 hybrid: Mamba2 backbone + one SHARED attention block.
+
+38 Mamba2 layers; a single weight-shared (attention + MLP) block is
+invoked every 6 layers (after layers 5, 11, 17, 23, 29, 35) with a
+per-invocation LoRA delta on the QKV projections — the Zamba2 trick that
+buys attention quality at ~1/6 the attention parameter cost. Simplified
+vs the HF checkpoint (no embedding-concat input to the shared block);
+noted in DESIGN.md §Arch-applicability.
+
+Decode state: 38 Mamba (conv, ssm) states + 6 shared-attention KV caches
+(one per invocation). The backbone is O(1) in context, so zamba2 runs the
+long_500k cell; only the 6 shared-attn caches scale with context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partition import constrain_batch
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models.common import (
+    TransformerConfig, cross_entropy_loss, dense_init, rms_norm,
+)
+from repro.models.transformer import init_mlp, mlp_forward
+
+__all__ = ["Zamba2LM"]
+
+LORA_RANK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2LM:
+    cfg: TransformerConfig
+
+    @property
+    def shared_layers(self) -> tuple[int, ...]:
+        k = self.cfg.shared_attn_every or 6
+        return tuple(range(k - 1, self.cfg.n_layers, k))
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+
+        def mamba_layer(k):
+            return {"pre_norm": {"scale": jnp.zeros((cfg.d_model,))},
+                    "ssm": m2.init_mamba2(k, cfg)}
+
+        n_inv = len(self.shared_layers)
+        hd = cfg.resolved_head_dim
+        lora_keys = jax.random.split(ks[1], n_inv)
+
+        def lora(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "lora_a": dense_init(k1, (cfg.d_model, LORA_RANK)),
+                "lora_b": jnp.zeros((LORA_RANK, cfg.n_heads * hd)),
+            }
+
+        params = {
+            "embed": {"table": dense_init(ks[2],
+                                          (cfg.vocab_size, cfg.d_model))},
+            "layers": jax.vmap(mamba_layer)(layer_keys),
+            "shared": {
+                "pre_norm": {"scale": jnp.zeros((cfg.d_model,))},
+                "attn": attn.init_gqa(ks[3], cfg),
+                "pre_mlp_norm": {"scale": jnp.zeros((cfg.d_model,))},
+                "mlp": init_mlp(ks[4], cfg),
+            },
+            "lora": jax.vmap(lora)(lora_keys),
+            "final_norm": {"scale": jnp.zeros((cfg.d_model,))},
+        }
+        return jax.tree.map(lambda x: x.astype(cfg.dtype), params)
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        mamba = jax.vmap(lambda _: m2.init_mamba2_cache(cfg, batch))(
+            jnp.arange(cfg.n_layers))
+        attn_c = jax.vmap(
+            lambda _: attn.init_gqa_cache(cfg, batch, seq_len))(
+            jnp.arange(len(self.shared_layers)))
+        return {"mamba": mamba, "attn": attn_c}
+
+    def _shared_block(self, params, x, inv_idx, positions, cache,
+                      write_pos):
+        cfg = self.cfg
+        lora = jax.tree.map(lambda a: a[inv_idx], params["lora"])
+        sp = params["shared"]
+        # LoRA delta on the fused Q projection for this invocation
+        wq_eff = sp["attn"]["wq"] + (
+            lora["lora_a"] @ lora["lora_b"]).astype(sp["attn"]["wq"].dtype)
+        attn_p = dict(sp["attn"], wq=wq_eff)
+        h = rms_norm(x, sp["pre_norm"]["scale"], cfg.norm_eps)
+        a, new_cache = attn.gqa_forward(
+            attn_p, h, cfg=cfg, positions=positions, cache=cache,
+            write_pos=write_pos)
+        x = x + a
+        h = rms_norm(x, sp["pre_mlp_norm"]["scale"], cfg.norm_eps)
+        x = x + mlp_forward(sp["mlp"], h, cfg)
+        return x, new_cache
+
+    def _run(self, params, x, positions, cache, write_pos,
+             *, remat: bool = False):
+        cfg = self.cfg
+        shared_at = set(self.shared_layers)
+        new_mamba = []
+        new_attn = []
+        inv = 0
+
+        def mamba_fwd(lp, h):
+            out, _ = m2.mamba2_scan(lp["ssm"], h, cfg=cfg)
+            return out
+
+        if remat:
+            mamba_fwd = jax.checkpoint(
+                mamba_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], params["layers"])
+            h = rms_norm(x, lp["pre_norm"]["scale"], cfg.norm_eps)
+            if cache is None:
+                s_out, nc = mamba_fwd(lp, h), None
+            elif x.shape[1] == 1:
+                mc = jax.tree.map(lambda a: a[li], cache["mamba"])
+                s_out, nc = m2.mamba2_step(lp["ssm"], h, mc, cfg=cfg)
+            else:
+                s_out, nc = m2.mamba2_scan(lp["ssm"], h, cfg=cfg,
+                                           return_cache=True)
+            x = x + s_out
+            if cache is not None:
+                new_mamba.append(nc)
+            if li in shared_at:
+                ac = (None if cache is None else
+                      jax.tree.map(lambda a: a[inv], cache["attn"]))
+                x, nac = self._shared_block(params, x, inv, positions, ac,
+                                            write_pos)
+                if cache is not None:
+                    new_attn.append(nac)
+                inv += 1
+        new_cache = None
+        if cache is not None:
+            stack = lambda items: jax.tree.map(
+                lambda *xs: jnp.stack(xs), *items)
+            new_cache = {"mamba": stack(new_mamba),
+                         "attn": stack(new_attn)}
+        return x, new_cache
+
+    # ---------------- public API ----------------
+    def forward(self, params, batch_in, *, remat: bool = False):
+        cfg = self.cfg
+        tokens = batch_in["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, _ = self._run(params, x, positions, None, None, remat=remat)
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        x = constrain_batch(x)
+        logits = constrain_batch(x @ params["embed"]["table"].T)  # tied
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch_in, *, remat: bool = False):
+        logits, aux = self.forward(params, batch_in, remat=remat)
+        ce, parts = cross_entropy_loss(logits, batch_in["targets"])
+        return ce + aux, dict(parts, aux=aux)
+
+    def prefill(self, params, batch_in, cache):
+        cfg = self.cfg
+        tokens = batch_in["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x, new_cache = self._run(params, x, positions, cache, jnp.int32(0))
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return (x[:, -1:] @ params["embed"]["table"].T), new_cache
+
+    def decode_step(self, params, token_in, pos, cache):
+        cfg = self.cfg
+        tokens = token_in["tokens"]
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+        x, new_cache = self._run(params, x, positions, cache,
+                                 jnp.asarray(pos, jnp.int32))
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        return (x @ params["embed"]["table"].T), new_cache

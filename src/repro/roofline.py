@@ -1,0 +1,125 @@
+"""Roofline accounting (TPU v5e targets).
+
+Terms per (arch, shape, mesh), derived from the compiled dry-run artifact
+(EXPERIMENTS.md §Roofline):
+
+    compute_s    = HLO_flops_per_device / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_device / HBM_BW
+    collective_s = collective_wire_bytes_per_device / ICI_BW
+
+``cost_analysis()`` on a post-SPMD executable reports PER-DEVICE flops and
+bytes. Collective bytes are not in cost_analysis: we parse the post-SPMD
+HLO text and sum operand bytes per collective kind, weighting all-reduce
+x2 (ring reduce-scatter + all-gather traffic).
+
+MODEL_FLOPS sanity term: 6*N*D for dense training (3 matmul passes), 2*N*D
+for inference-prefill, 2*N_active per token for decode; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overhead (< 1 means the
+compiled graph does extra/redundant work, e.g. recompute; ~0.5 with full
+remat of every matmul).
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip), as specified for this evaluation.
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128]' or '(f32[2], f32[4,4])' -> total bytes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * nbytes
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum collective RESULT bytes per kind from post-SPMD HLO.
+
+    Wire-cost weighting (ring algorithms, per device):
+      all-reduce       2x size   (reduce-scatter + all-gather phases)
+      all-gather       1x result (each device receives size*(n-1)/n ~ 1x)
+      reduce-scatter   1x operand ~ result*n ... we charge the RESULT size
+                       times 1 for rs (bytes received), matching ag.
+      all-to-all       1x
+      collective-permute 1x
+    """
+    counts: dict[str, int] = {}
+    bytes_: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_[kind] = bytes_.get(kind, 0.0) + b
+    weights = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+    total = sum(bytes_[k] * weights.get(k, 1.0) for k in bytes_)
+    return {
+        "counts": counts,
+        "bytes_by_kind": {k: float(v) for k, v in bytes_.items()},
+        "total_bytes": float(total),
+    }
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Useful-work FLOPs for the whole step, by the 6ND/2ND convention."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, cfg, shape,
+                   n_chips: int, n_micro: int = 1) -> dict:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get).replace("_s", "")
+    mf = model_flops(cfg, shape, n_chips)
+    mf_per_device = mf / n_chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf_per_device,
+        "useful_flops_ratio": (mf_per_device / flops_per_device
+                               if flops_per_device else 0.0),
+        "bound_s": max(terms.values()),
+        # fraction of the roofline-limited time doing useful math
+        "roofline_fraction": (
+            (mf_per_device / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    }

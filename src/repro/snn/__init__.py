@@ -1,0 +1,3 @@
+"""SNN training substrate: surrogate-gradient spiking MLPs + dual eval."""
+
+from repro.snn import model, train  # noqa: F401

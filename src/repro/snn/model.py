@@ -1,0 +1,90 @@
+"""Trainable spiking MLP — the software models of the paper's Table IV.
+
+Feed-forward LIF networks (784 -> H -> 10, H in {16..256}) trained with
+surrogate-gradient BPTT (fast-sigmoid, as in snnTorch) on rate-coded
+inputs. No biases: the Cerebra neurons integrate weighted spikes only, so
+a bias-free network deploys 1:1 onto the accelerator.
+
+``to_snnetwork`` converts trained params into the logical network the
+mapping compiler consumes — the software model and the deployed hardware
+model are THE SAME weights, which is what makes the paper's HW-vs-SW
+deviation measurement meaningful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lif import LIFParams, lif_step_train
+from repro.core.network import SNNetwork, feedforward
+
+__all__ = ["SNNModelConfig", "init_params", "forward", "to_snnetwork"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNModelConfig:
+    layer_sizes: tuple[int, ...] = (784, 128, 10)
+    params: LIFParams = dataclasses.field(
+        default_factory=lambda: LIFParams(
+            decay_rate=0.1, threshold=1.0, reset_mode="zero"))
+    surrogate_slope: float = 25.0
+    weight_clip: float = 1.0  # keeps Q16.16 + MXU-mode exactness bounds
+
+
+def init_params(key, config: SNNModelConfig) -> list[jnp.ndarray]:
+    sizes = config.layer_sizes
+    keys = jax.random.split(key, len(sizes) - 1)
+    ws = []
+    for k, (fan_in, fan_out) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        std = 1.0 / np.sqrt(fan_in)
+        ws.append(jax.random.normal(k, (fan_in, fan_out)) * std * 3.0)
+    return ws
+
+
+def forward(params: Sequence[jnp.ndarray], spikes,
+            config: SNNModelConfig):
+    """Run the spiking MLP over a spike train.
+
+    spikes: (T, B, D_in) float {0,1}. Returns dict with output spike
+    counts (B, n_out) and total hidden spike count (for rate regularizers).
+    """
+    lif = config.params
+    T, B = spikes.shape[0], spikes.shape[1]
+    del T
+    n_layers = len(params)
+    v0 = [jnp.zeros((B, w.shape[1])) for w in params]
+
+    def step(carry, x_t):
+        vs, _ = carry
+        new_vs = []
+        spk = x_t
+        layer_spikes = []
+        for i in range(n_layers):
+            syn = spk @ params[i]
+            state, spk = lif_step_train(
+                {"v": vs[i]}, syn, lif, config.surrogate_slope)
+            new_vs.append(state["v"])
+            layer_spikes.append(spk)
+        hidden_count = sum(jnp.sum(s) for s in layer_spikes[:-1])
+        return (new_vs, None), (layer_spikes[-1], hidden_count)
+
+    (_, _), (out_spikes, hidden_counts) = jax.lax.scan(
+        step, (v0, None), spikes)
+    return {
+        "output_counts": jnp.sum(out_spikes, axis=0),      # (B, n_out)
+        "output_spikes": out_spikes,                        # (T, B, n_out)
+        "hidden_spike_total": jnp.sum(hidden_counts),
+    }
+
+
+def to_snnetwork(params: Sequence[jnp.ndarray],
+                 config: SNNModelConfig) -> SNNetwork:
+    """Freeze trained params into the logical network for deployment."""
+    ws = [np.clip(np.asarray(w, np.float32),
+                  -config.weight_clip, config.weight_clip) for w in params]
+    return feedforward(ws, config.params)

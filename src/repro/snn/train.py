@@ -1,0 +1,157 @@
+"""Surrogate-gradient training for the spiking MLPs (paper §VI-A role).
+
+The paper trains in PyTorch/snnTorch offline, then deploys to hardware.
+Here the trainer is JAX end-to-end: rate-encode -> BPTT with fast-sigmoid
+surrogate -> Adam; optionally data-parallel under pjit (batch over the
+``data`` mesh axis; the model is tiny so params replicate).
+
+Evaluation runs BOTH arithmetic paths on identical spike trains:
+  software: float32, exact trained decay;
+  hardware: the bit-exact Cerebra-H model (quantized weights, snapped
+            shift decay) via repro.core.cerebra_h.
+Their accuracy difference is the paper's Table IV deviation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cerebra_h, coding, software
+from repro.snn.model import SNNModelConfig, forward, init_params, to_snnetwork
+from repro.training import optimizers
+
+__all__ = ["TrainConfig", "make_train_step", "train", "evaluate_dual"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    model: SNNModelConfig = dataclasses.field(default_factory=SNNModelConfig)
+    num_steps_time: int = 25          # T during training
+    lr: float = 2e-3
+    batch_size: int = 128
+    train_steps: int = 300
+    rate_reg: float = 1e-6            # hidden-rate regularizer
+    grad_clip: float = 1.0
+    seed: int = 0
+
+
+def loss_fn(params, spikes, labels, config: TrainConfig):
+    out = forward(params, spikes, config.model)
+    counts = out["output_counts"]
+    # spike-count cross entropy (snnTorch's ce_rate_loss)
+    logits = counts
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    reg = config.rate_reg * out["hidden_spike_total"] / spikes.shape[1]
+    acc = jnp.mean((jnp.argmax(counts, -1) == labels).astype(jnp.float32))
+    return ce + reg, {"loss": ce, "acc": acc}
+
+
+def make_train_step(config: TrainConfig, opt: optimizers.Optimizer):
+    @jax.jit
+    def train_step(params, opt_state, key, images, labels):
+        spikes = coding.poisson_encode(
+            key, images, config.num_steps_time)
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, spikes, labels, config)
+        grads, gnorm = optimizers.clip_by_global_norm(
+            grads, config.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        # hardware-deployability constraint: clip weights into Q16.16-safe
+        # range (also keeps the kernel MXU mode exact)
+        clip = config.model.weight_clip
+        params = [jnp.clip(w, -clip, clip) for w in params]
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(config: TrainConfig, data_iter, *, params=None, opt_state=None,
+          start_step: int = 0, log_every: int = 50, log_fn=print):
+    """Train; resumable via (params, opt_state, start_step)."""
+    # split deterministically BEFORE the init branch so a resumed run (params
+    # supplied) folds the same per-step keys as the original run did —
+    # resume-exactness depends on it (tests/test_snn_train.py).
+    k0, key = jax.random.split(jax.random.key(config.seed))
+    if params is None:
+        params = init_params(k0, config.model)
+    opt = optimizers.adam(config.lr)
+    if opt_state is None:
+        opt_state = opt.init(params)
+    step_fn = make_train_step(config, opt)
+    metrics = {}
+    for step, images, labels in data_iter:
+        key_t = jax.random.fold_in(key, step)
+        params, opt_state, metrics = step_fn(
+            params, opt_state, key_t, jnp.asarray(images),
+            jnp.asarray(labels))
+        if log_every and step % log_every == 0:
+            log_fn(f"step {step}: loss={float(metrics['loss']):.4f} "
+                   f"acc={float(metrics['acc']):.3f}")
+    return params, opt_state, metrics
+
+
+# --------------------------------------------------------------------------
+def evaluate_dual(params, config: SNNModelConfig, images, labels, *,
+                  num_steps_time: int, seed: int = 0,
+                  h_config: cerebra_h.CerebraHConfig | None = None) -> dict:
+    """Software vs hardware accuracy on identical spike trains.
+
+    Returns {'software_acc', 'hardware_acc', 'deviation_pct', 'agreement'}.
+    """
+    net = to_snnetwork(params, config)
+    key = jax.random.key(seed)
+    spikes = coding.poisson_encode(
+        key, jnp.asarray(images), num_steps_time, dtype=jnp.int32)
+    labels = np.asarray(labels)
+
+    sw = software.run_software(net, spikes.astype(jnp.float32))
+    sw_pred = np.asarray(jnp.argmax(sw["output_counts"], -1))
+
+    program = cerebra_h.compile_network(net, h_config)
+    hw = cerebra_h.run(program, spikes)
+    hw_pred = np.asarray(jnp.argmax(hw["output_counts"], -1))
+
+    sw_acc = float((sw_pred == labels).mean())
+    hw_acc = float((hw_pred == labels).mean())
+    return {
+        "software_acc": sw_acc,
+        "hardware_acc": hw_acc,
+        "deviation_pct": (hw_acc - sw_acc) * 100.0,
+        "agreement": float((sw_pred == hw_pred).mean()),
+        "hw_counts": hw,
+    }
+
+
+# --------------------------------------------------------------------------
+# Data-parallel variant (used by examples + distributed tests): batch is
+# sharded over the 'data' axis; params replicated; psum happens inside
+# jit via sharding constraints — pure pjit, no pmap.
+# --------------------------------------------------------------------------
+
+def make_sharded_train_step(config: TrainConfig, opt: optimizers.Optimizer,
+                            mesh, data_axis: str = "data"):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    batch_sharding = NamedSharding(mesh, P(data_axis))
+    replicated = NamedSharding(mesh, P())
+
+    base = make_train_step(config, opt)
+
+    @functools.partial(
+        jax.jit,
+        in_shardings=(replicated, replicated, replicated,
+                      batch_sharding, batch_sharding),
+        out_shardings=(replicated, replicated, replicated),
+    )
+    def step(params, opt_state, key, images, labels):
+        return base.__wrapped__(params, opt_state, key, images, labels)
+
+    return step

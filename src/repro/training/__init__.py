@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, schedules, compression, loop."""
+
+from repro.training import compression, loop, optimizers  # noqa: F401

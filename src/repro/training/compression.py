@@ -1,0 +1,114 @@
+"""Gradient compression for bandwidth-constrained all-reduce.
+
+At 1000+ node scale the data-parallel all-reduce of full-precision
+gradients dominates step time for small-FLOP models (exactly the paper's
+memory-dominates-compute observation, transplanted to collectives). Two
+standard schemes, both with correctness guarantees under tests:
+
+  * top-k sparsification with **error feedback** (memory of the residual is
+    carried to the next step, so the compressed SGD converges; Stich et al.)
+  * int8 quantization with per-tensor scale and stochastic rounding.
+
+These wrap the gradient pytree BEFORE the psum; the all-reduce then moves
+k values + indices (or int8) instead of f32. On the CPU container we
+validate semantics; the bytes-on-the-wire savings are accounted in the
+roofline collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TopKCompressor", "Int8Compressor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Keep the k largest-magnitude entries per tensor; residual feedback."""
+
+    fraction: float = 0.01  # keep top 1% by default
+
+    def init_error(self, params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def compress(self, grads, error):
+        """-> (sparse {values, indices, shape}, new_error) per leaf."""
+
+        def one(g, e):
+            g = g.astype(jnp.float32) + e
+            flat = g.reshape(-1)
+            k = max(1, int(flat.shape[0] * self.fraction))
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            vals = flat[idx]
+            new_e = flat.at[idx].set(0.0).reshape(g.shape)
+            return {"values": vals, "indices": idx,
+                    "size": flat.shape[0]}, new_e
+
+        pairs = jax.tree.map(one, grads, error,
+                             is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        sparse = jax.tree.map(lambda t: t[0], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda t: t[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return sparse, new_err
+
+    def decompress(self, sparse, shapes):
+        def one(s, shape):
+            flat = jnp.zeros((s["size"],), jnp.float32)
+            flat = flat.at[s["indices"]].add(s["values"])
+            return flat.reshape(shape)
+
+        return jax.tree.map(
+            one, sparse, shapes,
+            is_leaf=lambda x: isinstance(x, dict) and "values" in x)
+
+    def wire_bytes(self, sparse) -> int:
+        """Bytes this representation puts on the interconnect."""
+        total = 0
+        for leaf in jax.tree.leaves(
+                sparse,
+                is_leaf=lambda x: isinstance(x, dict) and "values" in x):
+            if isinstance(leaf, dict):
+                total += int(leaf["values"].size) * 4 * 2  # f32 + i32 index
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Per-tensor absmax int8 quantization with stochastic rounding."""
+
+    def compress(self, grads, key):
+        keys = _tree_keys(key, grads)
+
+        def one(g, k):
+            g = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            scaled = g / scale
+            noise = jax.random.uniform(k, g.shape, minval=-0.5, maxval=0.5)
+            q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+            return {"q": q, "scale": scale}
+
+        return jax.tree.map(one, grads, keys)
+
+    def decompress(self, comp):
+        return jax.tree.map(
+            lambda c: c["q"].astype(jnp.float32) * c["scale"],
+            comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+    def wire_bytes(self, comp) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(
+                comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x):
+            if isinstance(leaf, dict):
+                total += int(leaf["q"].size) + 4
+        return total
+
+
+def _tree_keys(key, tree) -> Any:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))

@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device (DESIGN.md: only the dry-run forces 512 placeholder devices)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_random_net(rng, n_in=20, n_neurons=48, density=0.25, out=10,
+                    decay_rate=0.25, reset_mode="zero", scale=0.5):
+    """Random recurrent-ish SNNetwork with an output slice."""
+    from repro.core.lif import LIFParams
+    from repro.core.network import SNNetwork
+
+    W = ((rng.random((n_in + n_neurons, n_neurons)) < density)
+         * rng.normal(0.0, scale, (n_in + n_neurons, n_neurons)))
+    params = LIFParams(decay_rate=decay_rate, threshold=1.0,
+                       reset_mode=reset_mode)
+    return SNNetwork(
+        n_inputs=n_in, n_neurons=n_neurons, weights=W.astype(np.float32),
+        params=params, output_slice=(n_neurons - out, n_neurons))
+
+
+def make_ff_net(rng, sizes=(20, 24, 10), decay_rate=0.25, scale=0.6):
+    from repro.core.lif import LIFParams
+    from repro.core.network import feedforward
+
+    ws = [rng.normal(0.0, scale / np.sqrt(a), (a, b)).astype(np.float32)
+          for a, b in zip(sizes[:-1], sizes[1:])]
+    return feedforward(ws, LIFParams(decay_rate=decay_rate))

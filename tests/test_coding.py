@@ -1,0 +1,73 @@
+"""Spike coding unit (encoder/decoder) invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coding
+
+
+def test_poisson_rate_statistics():
+    key = jax.random.key(0)
+    x = jnp.asarray([[0.0, 0.1, 0.5, 0.9, 1.0]])
+    T = 4000
+    s = coding.poisson_encode(key, x, T)
+    rates = np.asarray(s.mean(axis=0))[0]
+    np.testing.assert_allclose(rates, np.asarray(x)[0], atol=0.03)
+    assert rates[0] == 0.0 and rates[-1] == 1.0
+
+
+def test_poisson_deterministic_given_key():
+    key = jax.random.key(42)
+    x = jnp.full((3, 7), 0.4)
+    a = coding.poisson_encode(key, x, 50)
+    b = coding.poisson_encode(key, x, 50)
+    assert bool((a == b).all())
+
+
+@given(st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_latency_encode_order(intensities):
+    x = jnp.asarray(intensities)
+    T = 32
+    s = np.asarray(coding.latency_encode(x, T))
+    # exactly one spike per active input
+    assert (s.sum(0) == 1).all()
+    t_fire = s.argmax(0)
+    # stronger input fires no later
+    order = np.argsort(-x)
+    assert all(t_fire[order[i]] <= t_fire[order[i + 1]]
+               for i in range(len(order) - 1))
+
+
+def test_latency_encode_silent_at_zero():
+    s = np.asarray(coding.latency_encode(jnp.asarray([0.0, 0.5]), 16))
+    assert s[:, 0].sum() == 0 and s[:, 1].sum() == 1
+
+
+@given(st.integers(1, 10), st.integers(1, 5), st.integers(2, 6))
+@settings(max_examples=30, deadline=None)
+def test_decode_invariants(T, B, D):
+    rng = np.random.default_rng(T * 100 + B * 10 + D)
+    spikes = jnp.asarray((rng.random((T, B, D)) < 0.5).astype(np.float32))
+    counts = coding.rate_decode(spikes)
+    assert counts.shape == (B, D)
+    assert float(counts.sum()) == float(spikes.sum())
+    cls = coding.classify_decode(spikes)
+    assert cls.shape == (B,)
+    assert ((np.asarray(cls) >= 0) & (np.asarray(cls) < D)).all()
+    analog = coding.analog_decode(spikes, lo=-1.0, hi=3.0)
+    a = np.asarray(analog)
+    assert ((a >= -1.0 - 1e-6) & (a <= 3.0 + 1e-6)).all()
+
+
+def test_analog_decode_closed_loop():
+    """encode -> decode approximates identity (the SoC's sensor->actuator
+    loop contract)."""
+    key = jax.random.key(1)
+    x = jnp.asarray([[0.2, 0.5, 0.8]])
+    s = coding.poisson_encode(key, x, 2000)
+    y = np.asarray(coding.analog_decode(s))[0]
+    np.testing.assert_allclose(y, np.asarray(x)[0], atol=0.05)

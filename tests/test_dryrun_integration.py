@@ -1,0 +1,53 @@
+"""Multi-pod dry-run integration: one real (arch x shape x mesh) cell in a
+subprocess (the 512-device XLA flag must not leak into this test process).
+
+The full 40-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun``
+and is recorded in EXPERIMENTS.md; this test pins the machinery.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell(tmp_path):
+    out = tmp_path / "dryrun.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-3-2b", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    recs = json.load(open(out))
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    # memory fits a 16 GB-HBM chip
+    assert rec["memory"]["total_bytes"] < 16 * 2**30
+    # roofline terms present and positive
+    assert rec["roofline"]["memory_s"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_skip_cell_documented(tmp_path):
+    """long_500k on a full-attention arch must record a documented skip."""
+    out = tmp_path / "dryrun.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-20b", "--shape", "long_500k",
+         "--mesh", "single", "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["status"] == "skip"
+    assert "sub-quadratic" in rec["reason"]

@@ -1,0 +1,83 @@
+"""Property tests for the fixed-point substrate (bit-exact HW semantics)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fixedpoint as fxp
+
+I32 = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+
+
+@given(st.floats(min_value=-30000.0, max_value=30000.0,
+                 allow_nan=False, allow_infinity=False))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_error_bounded(x):
+    raw = fxp.to_fixed(np.float32(x))
+    back = float(fxp.from_fixed(raw))
+    # round-to-nearest: half an LSB, plus float32 representation slack
+    assert abs(back - np.float32(x)) <= (0.5 / fxp.Q16_16.scale
+                                         + abs(x) * 1e-6)
+
+
+def test_saturation():
+    fmt = fxp.Q16_16
+    assert int(fxp.to_fixed(1e9)) == (1 << 31) - 1
+    assert int(fxp.to_fixed(-1e9)) == -(1 << 31)
+    assert float(fxp.from_fixed(fxp.to_fixed(fmt.max_value))) == pytest.approx(
+        fmt.max_value, abs=1e-4)
+
+
+@given(I32, st.integers(min_value=0, max_value=2**16 - 1))
+@settings(max_examples=300, deadline=None)
+def test_fx_mul_matches_bigint_floor(a, b):
+    """fx_mul == floor(a*b / 2^16) with exact Python integers."""
+    got = int(fxp.fx_mul(jnp.int32(a), jnp.int32(b)))
+    want = (a * b) >> 16  # Python ints: arithmetic shift == floor division
+    # result must also wrap like int32
+    want = ((want + 2**31) % 2**32) - 2**31
+    assert got == want
+
+
+@given(I32, st.sampled_from(fxp.SHIFT_DECAY_RATES))
+@settings(max_examples=300, deadline=None)
+def test_shift_decay_matches_bigint(v, rate):
+    got = int(fxp.shift_decay(jnp.int32(v), rate))
+    k = {0.125: 3, 0.25: 2, 0.5: 1}.get(rate)
+    want = (v >> 2) if rate == 0.75 else v - (v >> k)
+    want = ((want + 2**31) % 2**32) - 2**31
+    assert got == want
+
+
+@given(st.integers(min_value=0, max_value=2**30))
+@settings(max_examples=100, deadline=None)
+def test_shift_decay_monotone_nonneg(v):
+    """For v >= 0 a larger decay rate removes at least as much potential."""
+    outs = [int(fxp.shift_decay(jnp.int32(v), r))
+            for r in fxp.SHIFT_DECAY_RATES]
+    assert all(o <= v for o in outs)
+    assert outs == sorted(outs, reverse=True)
+
+
+@given(st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_nearest_shift_decay_is_nearest(rate):
+    snapped = fxp.nearest_shift_decay(rate)
+    assert snapped in fxp.SHIFT_DECAY_RATES
+    assert all(abs(snapped - rate) <= abs(r - rate) + 1e-12
+               for r in fxp.SHIFT_DECAY_RATES)
+
+
+def test_quantize_weights_shapes():
+    w = np.random.default_rng(0).normal(0, 0.3, (7, 5)).astype(np.float32)
+    raw, deq = fxp.quantize_weights(w)
+    assert raw.shape == w.shape and raw.dtype == jnp.int32
+    np.testing.assert_allclose(np.asarray(deq), w, atol=1.0 / 65536)
+
+
+def test_np_to_fixed_matches_jax():
+    x = np.random.default_rng(1).normal(0, 100, (64,)).astype(np.float32)
+    np.testing.assert_array_equal(
+        fxp.np_to_fixed(x), np.asarray(fxp.to_fixed(x)))

@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+The Pallas kernels run in interpret=True on CPU (the wrappers detect the
+backend); the integer paths must be BIT-exact vs the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixedpoint as fxp
+from repro.kernels import ops, ref
+
+THRESH = 1 << 16  # 1.0 in Q16.16
+
+SHAPES_2D = [(1, 1), (3, 5), (8, 128), (7, 130), (16, 256), (33, 513)]
+
+
+def _tree_equal(a, b):
+    return all(bool((x == y).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("rate", fxp.SHIFT_DECAY_RATES)
+@pytest.mark.parametrize("reset", ["zero", "subtract", "hold"])
+def test_lif_step_sweep(shape, rate, reset):
+    if shape not in ((8, 128), (7, 130)) and (
+            rate != 0.25 or reset != "zero"):
+        # full param cross-product only on two representative shapes
+        pytest.skip("cross-product trimmed for runtime")
+    rng = np.random.default_rng(hash((shape, rate, reset)) % 2**31)
+    v = jnp.asarray(rng.integers(-2**22, 2**22, shape), jnp.int32)
+    syn = jnp.asarray(rng.integers(-2**18, 2**18, shape), jnp.int32)
+    got = ops.lif_step(v, syn, decay_rate=rate, threshold_raw=THRESH,
+                       reset_mode=reset)
+    want = ref.lif_step_ref(v, syn, decay_rate=rate, threshold_raw=THRESH,
+                            reset_mode=reset)
+    assert _tree_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,P", [(1, 1, 1), (2, 40, 33), (5, 160, 300),
+                                   (8, 128, 128), (3, 1056, 64)])
+def test_spike_timestep_sweep(B, S, P):
+    rng = np.random.default_rng(B * 1000 + S + P)
+    src = jnp.asarray(rng.random((B, S)) < 0.15, jnp.int32)
+    W = jnp.asarray(rng.integers(-2**14, 2**14, (S, P)), jnp.int32)
+    v = jnp.asarray(rng.integers(-2**18, 2**18, (B, P)), jnp.int32)
+    got = ops.spike_timestep(src, W, v, decay_rate=0.25,
+                             threshold_raw=THRESH)
+    want = ref.spike_timestep_ref(src, W, v, decay_rate=0.25,
+                                  threshold_raw=THRESH, reset_mode="zero")
+    assert _tree_equal(got, want[:2])
+
+
+def test_spike_timestep_event_gating_exactness():
+    """All-zero source blocks must not change results (the @pl.when gate)."""
+    rng = np.random.default_rng(7)
+    B, S, P = 4, 512, 96
+    src = np.zeros((B, S), np.int32)
+    src[:, :64] = (rng.random((B, 64)) < 0.3)  # only first block active
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (S, P)), jnp.int32)
+    v = jnp.asarray(rng.integers(-2**17, 2**17, (B, P)), jnp.int32)
+    got = ops.spike_timestep(jnp.asarray(src), W, v, decay_rate=0.5,
+                             threshold_raw=THRESH)
+    want = ref.spike_timestep_ref(jnp.asarray(src), W, v, decay_rate=0.5,
+                                  threshold_raw=THRESH, reset_mode="zero")
+    assert _tree_equal(got, want[:2])
+
+
+def test_spike_timestep_mxu_mode_exact_within_bounds():
+    """use_mxu=True accumulates in f32 on the MXU: exact while partial sums
+    stay under 2^24 (|w|<=1.0 Q16.16, fan-in <= 256 -> bounded)."""
+    rng = np.random.default_rng(11)
+    B, S, P = 4, 256, 64
+    src = jnp.asarray(rng.random((B, S)) < 0.2, jnp.int32)
+    # weights in [-0.25, 0.25] Q16.16 -> |partial| <= 256*0.25*2^16 = 2^22
+    W = jnp.asarray(rng.integers(-(1 << 14), 1 << 14, (S, P)), jnp.int32)
+    v = jnp.asarray(rng.integers(-2**18, 2**18, (B, P)), jnp.int32)
+    got = ops.spike_timestep(src, W, v, decay_rate=0.25,
+                             threshold_raw=THRESH, use_mxu=True)
+    want = ref.spike_timestep_ref(src, W, v, decay_rate=0.25,
+                                  threshold_raw=THRESH, reset_mode="zero")
+    assert _tree_equal(got, want[:2])
+
+
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("B,D,T", [(1, 1, 1), (4, 30, 16), (8, 128, 25),
+                                   (9, 784, 5)])
+def test_poisson_encode_sweep(B, D, T):
+    rng = np.random.default_rng(B + D + T)
+    x = jnp.asarray(rng.random((B, D)), jnp.float32)
+    got = ops.poisson_encode(42, x, T)
+    want = ref.poisson_encode_ref(42, x, T)
+    assert got.shape == (T, B, D)
+    assert bool((got == want).all())
+
+
+def test_poisson_encode_extremes_and_rate():
+    B, D, T = 16, 64, 200
+    x = jnp.concatenate([jnp.zeros((B, D // 2)), jnp.ones((B, D // 2))], -1)
+    s = ops.poisson_encode(0, x, T)
+    assert float(s[:, :, : D // 2].sum()) == 0.0       # p=0 never fires
+    assert float(s[:, :, D // 2:].mean()) == 1.0       # p=1 always fires
+    # mid-rate statistics
+    xm = jnp.full((B, D), 0.3, jnp.float32)
+    sm = ops.poisson_encode(3, xm, T)
+    assert abs(float(sm.mean()) - 0.3) < 0.01
+
+
+def test_poisson_encode_seed_sensitivity():
+    x = jnp.full((4, 32), 0.5, jnp.float32)
+    a = ops.poisson_encode(1, x, 20)
+    b = ops.poisson_encode(2, x, 20)
+    assert not bool((a == b).all())
+    c = ops.poisson_encode(1, x, 20)
+    assert bool((a == c).all())

@@ -1,0 +1,109 @@
+"""LIF neuron semantics: float reference, fixed-point HW model, surrogate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fixedpoint as fxp
+from repro.core.lif import (
+    LIFParams, lif_init, lif_step_fixed, lif_step_float, lif_step_train,
+    surrogate_spike,
+)
+
+
+@pytest.mark.parametrize("reset_mode", ["zero", "subtract", "hold"])
+def test_float_reset_semantics(reset_mode):
+    p = LIFParams(decay_rate=0.25, threshold=1.0, reset_mode=reset_mode)
+    state = {"v": jnp.asarray([[0.8, 0.0, 2.0]])}
+    syn = jnp.asarray([[0.5, 0.1, 0.0]])
+    new, spikes = lif_step_float(state, syn, p)
+    # v_decayed = v*0.75 -> [0.6, 0, 1.5]; v_new = [1.1, 0.1, 1.5]
+    np.testing.assert_array_equal(np.asarray(spikes), [[1.0, 0.0, 1.0]])
+    v = np.asarray(new["v"])[0]
+    if reset_mode == "zero":
+        np.testing.assert_allclose(v, [0.0, 0.1, 0.0], atol=1e-6)
+    elif reset_mode == "subtract":
+        np.testing.assert_allclose(v, [0.1, 0.1, 0.5], atol=1e-6)
+    else:
+        np.testing.assert_allclose(v, [1.1, 0.1, 1.5], atol=1e-6)
+
+
+@given(
+    st.lists(st.integers(-2**24, 2**24), min_size=1, max_size=8),
+    st.lists(st.integers(-2**20, 2**20), min_size=1, max_size=8),
+    st.sampled_from(fxp.SHIFT_DECAY_RATES),
+    st.sampled_from(["zero", "subtract", "hold"]),
+)
+@settings(max_examples=100, deadline=None)
+def test_fixed_step_matches_python_ints(vs, syns, rate, reset_mode):
+    """The HW step against an independent big-int oracle."""
+    n = min(len(vs), len(syns))
+    vs, syns = vs[:n], syns[:n]
+    p = LIFParams(decay_rate=rate, threshold=1.0, reset_mode=reset_mode)
+    state = {"v": jnp.asarray(vs, jnp.int32)}
+    new, spikes = lif_step_fixed(state, jnp.asarray(syns, jnp.int32), p)
+    thr = p.threshold_raw
+    for i, (v, s) in enumerate(zip(vs, syns)):
+        k = {0.125: 3, 0.25: 2, 0.5: 1}.get(rate)
+        vd = (v >> 2) if rate == 0.75 else v - (v >> k)
+        vn = vd + s
+        vn = ((vn + 2**31) % 2**32) - 2**31  # int32 wrap
+        spk = 1 if vn >= thr else 0
+        assert int(spikes[i]) == spk
+        if reset_mode == "zero":
+            want = 0 if spk else vn
+        elif reset_mode == "subtract":
+            want = vn - spk * thr
+        else:
+            want = vn
+        want = ((want + 2**31) % 2**32) - 2**31
+        assert int(new["v"][i]) == want
+
+
+def test_float_vs_fixed_agree_on_representable_trace(rng):
+    """Identical spike trains through both arithmetic paths: when weights
+    are exactly representable and decay=0.5 (exact in both paths for even
+    potentials), traces agree closely — the paper's Table IV premise."""
+    p = LIFParams(decay_rate=0.5, threshold=1.0, reset_mode="zero")
+    T, B, N = 30, 4, 16
+    syn_f = (rng.integers(-8, 8, (T, B, N)) / 16.0).astype(np.float32)
+    syn_raw = fxp.to_fixed(syn_f)
+    sf = {"v": jnp.zeros((B, N))}
+    sx = {"v": jnp.zeros((B, N), jnp.int32)}
+    agree = 0
+    for t in range(T):
+        sf, spk_f = lif_step_float(sf, jnp.asarray(syn_f[t]), p)
+        sx, spk_x = lif_step_fixed(sx, syn_raw[t], p)
+        agree += int((np.asarray(spk_f) == np.asarray(spk_x)).sum())
+    assert agree / (T * B * N) > 0.98
+
+
+def test_surrogate_forward_is_heaviside():
+    x = jnp.asarray([-1.0, -1e-6, 0.0, 1e-6, 1.0])
+    np.testing.assert_array_equal(
+        np.asarray(surrogate_spike(x)), [0.0, 0.0, 1.0, 1.0, 1.0])
+
+
+def test_surrogate_gradient_shape_and_decay():
+    g = jax.grad(lambda v: jnp.sum(surrogate_spike(v)))
+    near = float(g(jnp.asarray([0.0]))[0])
+    far = float(g(jnp.asarray([2.0]))[0])
+    assert near == pytest.approx(1.0)          # 1/(1+25*0)^2
+    assert 0.0 < far < 0.01                     # decays away from threshold
+    # and the straight-through reset keeps training step differentiable
+    p = LIFParams(decay_rate=0.25)
+    def loss(w):
+        state = {"v": jnp.zeros((1, 3))}
+        _, s = lif_step_train(state, w, p)
+        return jnp.sum(s * jnp.arange(3.0))
+    gw = jax.grad(loss)(jnp.asarray([[0.9, 1.1, 0.5]]))
+    assert np.all(np.isfinite(np.asarray(gw)))
+    assert float(jnp.abs(gw).sum()) > 0
+
+
+def test_lif_init_dtypes():
+    assert lif_init((2, 3))["v"].dtype == jnp.float32
+    assert lif_init((2, 3), fixed=True)["v"].dtype == jnp.int32

@@ -1,0 +1,188 @@
+"""LM model zoo: per-arch REDUCED smoke tests (forward/train step on CPU,
+shape + finiteness), and prefill/decode vs teacher-forced consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.shapes import Shape
+from repro.launch.steps import LMHarness
+
+SMOKE = Shape("smoke", 32, 2, "train")
+ARCHS = configs.list_archs()
+
+
+def _batch_for(h, shape, rng):
+    out = {}
+    for k, sds in h.batch_shapes(shape).items():
+        if sds.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, min(h.cfg.vocab_size, 100), sds.shape),
+                jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 0.02, sds.shape), sds.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_grads(arch, rng):
+    """One forward + one backward on the REDUCED config: correct shapes,
+    no NaNs anywhere (the per-arch smoke test the assignment requires)."""
+    mod = configs.get_arch(arch)
+    h = LMHarness(arch, cfg=mod.REDUCED)
+    params = h.model.init(jax.random.key(0))
+    batch = _batch_for(h, SMOKE, rng)
+
+    loss, aux = h.model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+    grads = jax.grad(lambda p: h.model.loss(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+    assert any(float(jnp.abs(g.astype(jnp.float32)).sum()) > 0
+               for g in leaves)
+
+    logits, _ = h.model.forward(params, batch)
+    B, S = batch["targets"].shape
+    assert logits.shape == (B, S if arch != "whisper-large-v3" else S,
+                            h.cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Decode-path consistency: prefill + step-by-step decode must reproduce the
+# teacher-forced logits (catches cache indexing / rope / window bugs).
+# ---------------------------------------------------------------------------
+DECODE_ARCHS = ["granite-3-2b", "mixtral-8x7b", "minicpm3-4b",
+                "zamba2-1.2b", "rwkv6-7b", "gemma3-12b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_matches_forward(arch, rng):
+    mod = configs.get_arch(arch)
+    cfg = dataclasses.replace(mod.REDUCED, dtype=jnp.float32)
+    if cfg.moe is not None:
+        # capacity_factor = E/k makes capacity dispatch exactly dropless so
+        # teacher-forced and incremental paths are comparable (decode steps
+        # are dropless by construction; GShard prefill/train may drop)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=cfg.moe.n_experts / cfg.moe.top_k))
+    h = LMHarness(arch, cfg=cfg)
+    model = h.model
+    params = model.init(jax.random.key(1))
+    B, S, k = 2, 12, 6
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+
+    full_logits, _ = model.forward(params, {"tokens": toks})
+
+    cache = model.init_cache(B, S)
+    logits_k, cache = model.prefill(params, {"tokens": toks[:, :k]}, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_k[:, 0]), np.asarray(full_logits[:, k - 1]),
+        rtol=2e-3, atol=2e-3)
+
+    for pos in range(k, S):
+        step_logits, cache = model.decode_step(
+            params, {"tokens": toks[:, pos:pos + 1]}, jnp.int32(pos), cache)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]), np.asarray(full_logits[:, pos]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch} decode divergence at pos {pos}")
+
+
+def test_sliding_window_ring_cache_long_decode(rng):
+    """Mixtral REDUCED has window 8: decoding past the window must still
+    match teacher forcing (ring-buffer overwrite correctness)."""
+    mod = configs.get_arch("mixtral-8x7b")
+    cfg = dataclasses.replace(mod.REDUCED, dtype=jnp.float32)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=cfg.moe.n_experts / cfg.moe.top_k))
+    model = configs.get_arch("mixtral-8x7b").build(cfg)
+    params = model.init(jax.random.key(2))
+    B, S = 1, 24  # 3x the window
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(B, S)
+    _, cache = model.prefill(params, {"tokens": toks[:, :4]}, cache)
+    for pos in range(4, S):
+        step_logits, cache = model.decode_step(
+            params, {"tokens": toks[:, pos:pos + 1]}, jnp.int32(pos), cache)
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0]), np.asarray(full_logits[:, -1]),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_whisper_encdec_paths(rng):
+    mod = configs.get_arch("whisper-large-v3")
+    cfg = dataclasses.replace(mod.REDUCED, dtype=jnp.float32)
+    h = LMHarness("whisper-large-v3", cfg=cfg)
+    model = h.model
+    params = model.init(jax.random.key(3))
+    B, F, S = 2, 8, 10
+    enc = jnp.asarray(rng.normal(0, 0.1, (B, F, cfg.d_model)), jnp.float32)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"enc_embeds": enc, "tokens": toks, "targets": toks}
+    loss, _ = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+    full_logits, _ = model.forward(params, batch)
+    cache = model.init_cache(B, S, F)
+    k = 4
+    logits_k, cache = model.prefill(
+        params, {"enc_embeds": enc, "tokens": toks[:, :k]}, cache)
+    np.testing.assert_allclose(np.asarray(logits_k[:, 0]),
+                               np.asarray(full_logits[:, k - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for pos in range(k, S):
+        step_logits, cache = model.decode_step(
+            params, {"tokens": toks[:, pos:pos + 1]}, jnp.int32(pos), cache)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]), np.asarray(full_logits[:, pos]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_qwen2vl_mrope_changes_logits(rng):
+    """M-RoPE position stream must influence attention (not a no-op)."""
+    mod = configs.get_arch("qwen2-vl-2b")
+    cfg = dataclasses.replace(mod.REDUCED, dtype=jnp.float32)
+    model = configs.get_arch("qwen2-vl-2b").build(cfg)
+    params = model.init(jax.random.key(4))
+    B, S = 1, 8
+    emb = jnp.asarray(rng.normal(0, 0.05, (B, S, cfg.d_model)), jnp.float32)
+    tgt = jnp.zeros((B, S), jnp.int32)
+    pos_a = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    pos_b = pos_a.at[1:].multiply(3)  # different spatial ids
+    la, _ = model.forward({**params}, {"embeds": emb, "targets": tgt,
+                                       "mrope_positions": pos_a})
+    lb, _ = model.forward({**params}, {"embeds": emb, "targets": tgt,
+                                       "mrope_positions": pos_b})
+    assert not np.allclose(np.asarray(la), np.asarray(lb))
+
+
+def test_moe_router_balance_aux(rng):
+    """MoE aux loss exists and is positive (load-balance term wired in)."""
+    mod = configs.get_arch("mixtral-8x7b")
+    h = LMHarness("mixtral-8x7b", cfg=mod.REDUCED)
+    params = h.model.init(jax.random.key(5))
+    batch = _batch_for(h, SMOKE, rng)
+    _, aux = h.model.forward(params, batch)
+    assert float(aux) > 0.0
+
+
+def test_param_count_analytics():
+    """Analytic 6ND param counts are close to the actual leaf totals."""
+    for arch in ("granite-3-2b", "mixtral-8x7b", "rwkv6-7b"):
+        mod = configs.get_arch(arch)
+        h = LMHarness(arch, cfg=mod.REDUCED)
+        shapes = h.param_shapes()
+        actual = sum(int(np.prod(s.shape))
+                     for s in jax.tree.leaves(shapes))
+        analytic = h.cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.15, arch
+        if h.cfg.moe:
+            assert h.cfg.active_param_count() < analytic

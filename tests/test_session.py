@@ -1,0 +1,71 @@
+"""Multi-model co-residency (paper §V-D): address-space isolation."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cerebra_h
+from repro.core.session import AcceleratorSession
+
+from conftest import make_ff_net
+
+
+def test_co_residency_isolation(rng):
+    """A model's outputs are identical whether it runs alone or alongside
+    other resident models — disjoint clusters + rows = no interference."""
+    netA = make_ff_net(rng, sizes=(12, 40, 10))
+    netB = make_ff_net(rng, sizes=(8, 30, 5), scale=0.9)
+    key = jax.random.key(0)
+    xA = rng.random((6, 12)).astype(np.float32)
+    xB = rng.random((6, 8)).astype(np.float32)
+
+    solo = AcceleratorSession()
+    solo.deploy("A", netA)
+    outA_solo = solo.run("A", xA, 20, key)
+
+    both = AcceleratorSession()
+    both.deploy("A", netA)
+    both.deploy("B", netB)
+    outs = both.run_all({"A": xA, "B": xB}, 20, key)
+
+    np.testing.assert_array_equal(
+        np.asarray(outA_solo["predictions"]),
+        np.asarray(outs["A"]["predictions"]))
+    np.testing.assert_array_equal(
+        np.asarray(outA_solo["output_counts"]),
+        np.asarray(outs["A"]["output_counts"]))
+
+
+def test_group_boundary_isolation(rng):
+    """Deployments round up to group boundaries so no two models share a
+    weight SRAM (the hardware's address-space isolation guarantee)."""
+    sess = AcceleratorSession()
+    m1 = sess.deploy("m1", make_ff_net(rng, sizes=(6, 10, 4)))
+    m2 = sess.deploy("m2", make_ff_net(rng, sizes=(6, 10, 4)))
+    cpg = sess.geometry.clusters_per_group
+    assert m1.cluster_range[1] % cpg == 0
+    assert m2.cluster_range[0] >= m1.cluster_range[1]
+
+
+def test_capacity_exhaustion(rng):
+    sess = AcceleratorSession()
+    sess.deploy("big", make_ff_net(rng, sizes=(10, 900, 10)))
+    with pytest.raises(ValueError, match="clusters"):
+        sess.deploy("more", make_ff_net(rng, sizes=(10, 200, 10)))
+
+
+def test_duplicate_name_rejected(rng):
+    sess = AcceleratorSession()
+    sess.deploy("m", make_ff_net(rng, sizes=(4, 8, 2)))
+    with pytest.raises(ValueError, match="already"):
+        sess.deploy("m", make_ff_net(rng, sizes=(4, 8, 2)))
+
+
+def test_utilization_accounting(rng):
+    sess = AcceleratorSession()
+    sess.deploy("a", make_ff_net(rng, sizes=(6, 40, 10)))
+    u = sess.utilization()
+    assert 0 < u["neuron_utilization"] < 1
+    assert 0 < u["row_utilization"] < 1
+    assert u["models"] == ["a"]
+    assert u["clusters_used"] >= -(-50 // 32)  # >= ceil(neurons/32)
