@@ -2,6 +2,11 @@
 reference, at the paper's 1024-neuron scale (CPU wall time is NOT the
 deliverable — the structural claim is the event-gated kernel touches fewer
 weight blocks; timings are still printed for regression tracking).
+
+``--backend`` additionally benchmarks the full SpikeEngine scan per
+backend, so the Pallas-vs-reference speedup is measurable on real
+inference timesteps (one engine, carries included) rather than only on
+the isolated kernel call.
 """
 
 from __future__ import annotations
@@ -13,7 +18,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core.engine import BACKENDS, DecaySpec, SpikeEngine
 from repro.kernels import ops, ref
+
+
+def bench_engine_backends(backends, *, batch: int, activity: float,
+                          steps: int = 4) -> None:
+    """Per-backend engine-scan throughput at the 1024-neuron scale."""
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    ext = jnp.asarray(
+        rng.random((steps, batch, n_in)) < activity, jnp.int32)
+    for backend in backends:
+        engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero",
+                             backend=backend)
+        t_run = time_call(lambda e=engine: e.run(ext)["spikes"])
+        per_step = t_run / steps
+        emit(f"engine/timestep_{backend}", per_step,
+             f"us/timestep B={batch} S={n_in + P} P={P} "
+             f"activity={activity} T={steps}")
 
 
 def main(argv=None) -> None:
@@ -21,7 +46,14 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--activity", type=float, default=0.05,
                     help="fraction of sources spiking (paper: sparse)")
+    ap.add_argument("--backend", choices=list(BACKENDS) + ["all"],
+                    default="all",
+                    help="SpikeEngine backend(s) to benchmark")
     args = ap.parse_args(argv)
+    backends = list(BACKENDS) if args.backend == "all" else [args.backend]
+
+    bench_engine_backends(backends, batch=args.batch,
+                          activity=args.activity)
 
     rng = np.random.default_rng(0)
     B, S, P = args.batch, 784 + 1024, 1024

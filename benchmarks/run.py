@@ -32,6 +32,9 @@ def main() -> None:
                     help="run the paper's full 80-experiment Table IV grid")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections")
+    ap.add_argument("--backend", default=None,
+                    help="SpikeEngine backend for the kernels/speedup "
+                         "sections (reference | pallas | pallas-mxu)")
     args = ap.parse_args()
 
     only = set(args.only.split(",")) if args.only else None
@@ -40,10 +43,12 @@ def main() -> None:
     def want(name: str) -> bool:
         return only is None or name in only
 
+    backend_args = ["--backend", args.backend] if args.backend else []
+
     if want("kernels"):
         _section("kernels")
         from benchmarks import kernel_bench
-        kernel_bench.main([])
+        kernel_bench.main(backend_args)
 
     if want("table_v"):
         _section("table_v (power breakdown)")
@@ -58,7 +63,8 @@ def main() -> None:
     if want("speedup"):
         _section("speedup (Cerebra-S vs Cerebra-H)")
         from benchmarks import speedup_s_vs_h
-        speedup_s_vs_h.main(["--steps", "25"] if args.fast else [])
+        speedup_s_vs_h.main(
+            (["--steps", "25"] if args.fast else []) + backend_args)
 
     if want("table_iv"):
         _section("table_iv (accuracy grid)")

@@ -16,6 +16,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import cerebra_h, cerebra_s, coding, timing
+from repro.core.engine import BACKENDS
 from repro.core.lif import LIFParams
 from repro.data import mnist
 from repro.snn.model import SNNModelConfig, init_params, to_snnetwork
@@ -26,6 +27,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--backend", choices=BACKENDS, default="reference",
+                    help="SpikeEngine backend for both generations")
     args = ap.parse_args(argv)
 
     cfg = SNNModelConfig(layer_sizes=(784, args.hidden, 10),
@@ -37,8 +40,10 @@ def main(argv=None) -> dict:
     spikes = coding.poisson_encode(jax.random.key(1), x, args.steps,
                                    dtype=np.int32)
 
-    outS = cerebra_s.run(cerebra_s.compile_network(net), spikes)
-    outH = cerebra_h.run(cerebra_h.compile_network(net), spikes)
+    outS = cerebra_s.run(cerebra_s.compile_network(net), spikes,
+                         backend=args.backend)
+    outH = cerebra_h.run(cerebra_h.compile_network(net), spikes,
+                         backend=args.backend)
     # per-image mean cycles per timestep
     cyc_s = np.asarray(outS["cycles"], np.float64).mean()
     cyc_h = np.asarray(outH["cycles"], np.float64).mean()

@@ -3,11 +3,15 @@
 The hierarchical NoC + address-space isolation let Cerebra-H host several
 SNN models at once in disjoint cluster ranges. This example deploys THREE
 workloads side by side — a digit classifier, a robot controller, and an
-anomaly scorer — runs them concurrently, and verifies isolation (each
-model's outputs are bit-identical to running it alone).
+anomaly scorer — runs them concurrently in fused SpikeEngine scans (one
+scan per shared LIF configuration, exactly like the hardware timestep
+advancing all clusters at once), and verifies isolation (each model's
+outputs are bit-identical to running it alone).
 
-    PYTHONPATH=src python examples/multi_model.py
+    PYTHONPATH=src python examples/multi_model.py [--backend pallas]
 """
+
+import argparse
 
 import jax
 import numpy as np
@@ -29,6 +33,11 @@ def anomaly_net(rng) -> "SNNetwork":
 
 
 def main() -> None:
+    from repro.core.engine import BACKENDS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="reference")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
 
     # model 1: trained digit classifier (784 -> 32 -> 10)
@@ -39,7 +48,7 @@ def main() -> None:
         log_every=0)
     digits = to_snnetwork(params, cfg.model)
 
-    sess = AcceleratorSession()
+    sess = AcceleratorSession(backend=args.backend)
     m1 = sess.deploy("digits", digits)        # 784->32->10: 42 neurons
     m2 = sess.deploy("pid", build_controller())
     m3 = sess.deploy("anomaly", anomaly_net(rng))
@@ -59,7 +68,7 @@ def main() -> None:
     print(f"[multi] digits acc while co-resident: {acc:.3f}")
 
     # isolation proof: digits alone == digits co-resident
-    solo = AcceleratorSession()
+    solo = AcceleratorSession(backend=args.backend)
     solo.deploy("digits", digits)
     ref = solo.run("digits", xd, 20, key)
     same = np.array_equal(np.asarray(ref["output_counts"]),

@@ -1,16 +1,20 @@
 """Quickstart: train a spiking MLP, deploy it to the Cerebra-H model,
 compare software vs hardware inference, and read out the energy report.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend pallas]
 
 This is the paper's whole pipeline in ~60 lines: snnTorch-style training
 (JAX surrogate gradients) -> hardware config compiler -> bit-exact
-accelerator inference -> Table IV-style deviation + Table V-style power.
+accelerator inference (on the SpikeEngine backend of your choice) ->
+Table IV-style deviation + Table V-style power.
 """
+
+import argparse
 
 import jax
 
 from repro.core import cerebra_h, energy
+from repro.core.engine import BACKENDS
 from repro.core.lif import LIFParams
 from repro.data import mnist
 from repro.snn.model import SNNModelConfig, to_snnetwork
@@ -18,6 +22,9 @@ from repro.snn.train import TrainConfig, evaluate_dual, train
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="reference")
+    args = ap.parse_args()
     # 1. train the software reference model (784 -> 64 -> 10 LIF MLP)
     cfg = TrainConfig(
         model=SNNModelConfig(layer_sizes=(784, 64, 10),
@@ -29,7 +36,8 @@ def main() -> None:
 
     # 2. software-vs-hardware inference on identical spike trains
     x, y = mnist.load_or_generate("test", 512, seed=1)
-    res = evaluate_dual(params, cfg.model, x, y, num_steps_time=25)
+    res = evaluate_dual(params, cfg.model, x, y, num_steps_time=25,
+                        backend=args.backend)
     print(f"[quickstart] software acc: {res['software_acc']:.3f}  "
           f"hardware acc: {res['hardware_acc']:.3f}  "
           f"deviation: {res['deviation_pct']:+.2f}pp  "

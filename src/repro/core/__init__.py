@@ -2,6 +2,8 @@
 
 Public surface:
   fixedpoint   — Q16.16 emulation, shift decay
+  engine       — SpikeEngine: the one timestep core (scan + carries +
+                 backend dispatch: reference / pallas / pallas-mxu)
   lif          — LIF neuron (float reference / fixed hardware / trainable)
   coding       — Poisson rate encoder, spike decoders
   network      — logical SNN description (adjacency-matrix form)
@@ -19,6 +21,7 @@ from repro.core import (  # noqa: F401
     cerebra_s,
     coding,
     energy,
+    engine,
     fixedpoint,
     lif,
     mapping,

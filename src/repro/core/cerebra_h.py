@@ -16,22 +16,23 @@ Hardware semantics modeled:
   * Multi-model co-residency via disjoint cluster subsets.
 
 TPU adaptation: the blocked weight layout (source, dst_cluster, 32) is the
-SRAM row structure; the functional timestep is a cluster-blocked int32
-matmul + fused shift-decay LIF — the Pallas kernel in
-``repro.kernels.spike_timestep`` implements exactly this with cluster-gated
-block skipping; this module is the pure-jnp reference and carries the
-cycle/energy accounting.
+SRAM row structure; the functional timestep runs on the shared
+:class:`~repro.core.engine.SpikeEngine` — whose ``"pallas"`` backend is the
+event-gated kernel in ``repro.kernels.spike_timestep`` (cluster-gated block
+skipping ON the inference path) and whose ``"reference"`` backend is the
+pure-jnp blocked matmul. This module contributes the compile step and the
+cycle/energy cost model, applied as a pure pass over the spike raster.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fixedpoint as fxp
+from repro.core.engine import DecaySpec, SpikeEngine, sources_raster
 from repro.core.lif import LIFParams
 from repro.core.mapping import (
     ClusterGeometry,
@@ -42,7 +43,14 @@ from repro.core.mapping import (
 )
 from repro.core.network import SNNetwork
 
-__all__ = ["CerebraHConfig", "CerebraHProgram", "compile_network", "run"]
+__all__ = [
+    "CerebraHConfig",
+    "CerebraHProgram",
+    "compile_network",
+    "make_engine",
+    "cost_model",
+    "run",
+]
 
 MAX_FREQ_MHZ = 96.24  # paper §VII-B: Cerebra-H critical path 10.3904 ns
 
@@ -77,6 +85,9 @@ class CerebraHProgram:
     decay_rate: float             # snapped to hardware-supported rate
     capacity_report: dict
     comm_profile: dict
+    # per-program engine cache: one compiled scan per backend
+    _engines: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_sources(self) -> int:
@@ -131,100 +142,99 @@ def compile_network(
     )
 
 
-def _timestep(program: CerebraHProgram, carry, ext_spikes_t):
-    """One Cerebra-H timestep. carry: {'v': (B,P) i32, 'spikes': (B,P) i32}."""
+def make_engine(program: CerebraHProgram,
+                backend: str = "reference") -> SpikeEngine:
+    """The program's SpikeEngine for ``backend`` (built once, then cached).
+
+    The blocked SRAM image (S, C, n) flattens to the engine's (S, P) weight
+    matrix; the H generation decays with the arithmetic-shift PDU.
+    """
+    engine = program._engines.get(backend)
+    if engine is None:
+        Wb = program.weights_raw
+        engine = SpikeEngine(
+            Wb.reshape(Wb.shape[0], -1),
+            program.n_inputs,
+            decay=DecaySpec.shift(program.decay_rate),
+            threshold_raw=program.params.threshold_raw,
+            reset_mode=program.params.reset_mode,
+            backend=backend,
+        )
+        program._engines[backend] = engine
+    return engine
+
+
+def cost_model(program: CerebraHProgram, ext_spikes, spikes) -> dict:
+    """Pure cycle/SOP/row-fetch accounting from a spike raster.
+
+    Mirrors the hardware, as a vectorized pass over all T steps at once:
+
+    * Weight Resolver: every spiking source requests one SRAM row per
+      destination cluster it connects to; the single-port SRAM serves one
+      row/cycle per group (arbitration), groups run in parallel.
+    * NoC spike path: each spiking neuron emits one packet per destination
+      cluster (Outgoing Encoder serializes one per cycle); L1 routers run
+      in parallel; crossing L2 adds hop latency. Packets of step t come
+      from the previous timestep boundary.
+
+    Args:
+      ext_spikes: (T, B, n_inputs) external stimulus in {0,1}.
+      spikes: (T, B, n_physical) raster produced by the engine.
+    Returns:
+      {'cycles', 'sops', 'row_fetches'}: each (T, B) int32.
+    """
     cfg = program.config
     geom = cfg.geometry
-    v, prev_spikes = carry["v"], carry["spikes"]
-    B = v.shape[0]
-    sources = jnp.concatenate(
-        [ext_spikes_t.astype(jnp.int32), prev_spikes], axis=-1
-    )  # (B, S)
+    sources = sources_raster(ext_spikes, spikes)  # (T, B, S)
+    T, B = sources.shape[0], sources.shape[1]
 
-    # ---- accumulate: blocked matmul == per-row fetch + 32-wide delivery ----
-    Wb = program.weights_raw  # (S, C, n)
-    syn = jax.lax.dot_general(
-        sources,
-        Wb.reshape(Wb.shape[0], -1),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )  # (B, C*n)
-
-    # ---- fused LIF with shift decay ----
-    v_decayed = fxp.shift_decay(v, program.decay_rate)
-    v_new = v_decayed + syn
-    thr = jnp.int32(program.params.threshold_raw)
-    spikes = (v_new >= thr).astype(jnp.int32)
-    if program.params.reset_mode == "zero":
-        v_out = jnp.where(spikes > 0, jnp.int32(0), v_new)
-    elif program.params.reset_mode == "subtract":
-        v_out = v_new - spikes * thr
-    else:  # hold
-        v_out = v_new
-
-    # ---- cost model -------------------------------------------------------
-    # Row fetches per group: every spiking source requests one row per
-    # destination cluster it connects to; the single-port SRAM serves one
-    # row/cycle per group (resolver arbitration), groups run in parallel.
     row_exists = jnp.asarray(program.row_exists, jnp.int32)  # (S, C)
-    rows_active = jax.lax.dot_general(
-        sources, row_exists, (((1,), (0,)), ((), ())),
+    rows_active = jnp.einsum(
+        "tbs,sc->tbc", sources, row_exists,
         preferred_element_type=jnp.int32,
-    )  # (B, C) row fetches destined to each cluster
+    )  # (T, B, C) row fetches destined to each cluster
     rows_per_group = rows_active.reshape(
-        B, geom.n_groups, geom.clusters_per_group
-    ).sum(-1)  # (B, G)
-    group_cycles = rows_per_group.max(axis=-1)  # (B,) parallel groups
+        T, B, geom.n_groups, geom.clusters_per_group
+    ).sum(-1)
+    group_cycles = rows_per_group.max(axis=-1)  # (T, B) parallel groups
 
-    # NoC spike-path cost: each spiking neuron emits one packet per
-    # destination cluster (the Outgoing Encoder serializes one per cycle);
-    # L1 links run in parallel; packets crossing L2 add hop latency.
-    # Packets per source cluster = spikes in that cluster x its row fanout.
-    neuron_rows = row_exists[program.n_inputs :]  # (P, C)
+    neuron_rows = row_exists[program.n_inputs:]  # (P, C)
     pkt_per_neuron = neuron_rows.sum(-1)  # (P,) packets a spike generates
-    spk = prev_spikes  # packets for *this* step come from prev boundary
+    prev = sources[:, :, program.n_inputs:]  # spikes of the prev boundary
     pkts_by_cluster = (
-        (spk * pkt_per_neuron[None, :])
-        .reshape(B, geom.n_clusters, geom.neurons_per_cluster)
+        (prev * pkt_per_neuron[None, None, :])
+        .reshape(T, B, geom.n_clusters, geom.neurons_per_cluster)
         .sum(-1)
-    )  # (B, C)
+    )  # (T, B, C)
     l1_cycles = pkts_by_cluster.reshape(
-        B, geom.n_l1_routers, geom.clusters_per_l1
+        T, B, geom.n_l1_routers, geom.clusters_per_l1
     ).sum(-1).max(-1)  # serialize per L1 router, routers in parallel
     noc_cycles = l1_cycles + cfg.spike_pipeline_depth + cfg.l2_hop_cycles
 
-    cycles = (
-        jnp.maximum(group_cycles, noc_cycles) + cfg.sync_overhead_cycles
-    )
+    cycles = jnp.maximum(group_cycles, noc_cycles) + cfg.sync_overhead_cycles
     fanout = jnp.asarray(program.fanout, jnp.int32)
-    sops = jnp.sum(sources * fanout[None, :], axis=-1)  # true synaptic ops
-    row_fetches = rows_active.sum(-1)  # (B,) SRAM row reads this step
-
-    return {"v": v_out, "spikes": spikes}, (
-        spikes, cycles, sops, row_fetches
-    )
+    sops = jnp.sum(sources * fanout[None, None, :], axis=-1)
+    row_fetches = rows_active.sum(-1)  # (T, B) SRAM row reads per step
+    return {"cycles": cycles, "sops": sops, "row_fetches": row_fetches}
 
 
-def run(program: CerebraHProgram, ext_spikes):
+def run(program: CerebraHProgram, ext_spikes, backend: str = "reference"):
     """Run inference. ext_spikes: (T, B, n_inputs) in {0,1}.
 
-    Returns dict with spike raster (physical layout), logical output counts,
-    and per-step cycles / SOPs / SRAM row fetches.
+    ``backend`` selects the SpikeEngine backend ("reference" | "pallas" |
+    "pallas-mxu"); all are bit-exact (the mxu bound is checked at engine
+    build). Returns dict with spike raster (physical layout), logical
+    output counts, and per-step cycles / SOPs / SRAM row fetches.
     """
-    ext_spikes = jnp.asarray(ext_spikes)
-    B = ext_spikes.shape[1]
-    n_phys = program.config.geometry.n_physical
-    carry = {
-        "v": jnp.zeros((B, n_phys), jnp.int32),
-        "spikes": jnp.zeros((B, n_phys), jnp.int32),
-    }
-    step = lambda c, x: _timestep(program, c, x)
-    _, (spikes, cycles, sops, rows) = jax.lax.scan(step, carry, ext_spikes)
+    engine = make_engine(program, backend)
+    out = engine.run(ext_spikes)
+    spikes = out["spikes"]
+    cost = cost_model(program, ext_spikes, spikes)
     out_counts = jnp.sum(spikes[:, :, jnp.asarray(program.output_map)], axis=0)
     return {
         "spikes": spikes,
         "output_counts": out_counts,
-        "cycles": cycles,
-        "sops": sops,
-        "row_fetches": rows,
+        "cycles": cost["cycles"],
+        "sops": cost["sops"],
+        "row_fetches": cost["row_fetches"],
     }

@@ -15,24 +15,33 @@ Hardware semantics being modeled:
     multiplier), potential adder (threshold compare + reset).
 
 TPU adaptation (DESIGN.md §2): the serial bus walk is functionally a
-spike-vector × adjacency-matrix product; we compute it as an int32 matmul
-(the MXU *is* the broadcast/accumulate fabric) while the cost model retains
-the serial event count — cycles(t) = Σ_sources fanout(spiking sources at t).
+spike-vector × adjacency-matrix product; the functional timestep runs on
+the shared :class:`~repro.core.engine.SpikeEngine` (backend-selectable:
+pure-jnp int32 matmul or the event-gated Pallas kernel), while the cost
+model here retains the serial event count as a pure pass over the spike
+raster — cycles(t) = Σ_sources fanout(spiking sources at t).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fixedpoint as fxp
-from repro.core.lif import LIFParams, lif_init
+from repro.core.engine import DecaySpec, SpikeEngine, sources_raster
+from repro.core.lif import LIFParams
 from repro.core.network import SNNetwork
 
-__all__ = ["CerebraSConfig", "CerebraSProgram", "compile_network", "run"]
+__all__ = [
+    "CerebraSConfig",
+    "CerebraSProgram",
+    "compile_network",
+    "make_engine",
+    "cost_model",
+    "run",
+]
 
 MAX_FREQ_MHZ = 10.17  # paper §V: Cerebra-S critical path
 
@@ -59,6 +68,9 @@ class CerebraSProgram:
     fanout: np.ndarray             # (n_sources,) int — bus events per spike
     output_slice: tuple[int, int]
     decay_raw: int                 # fixed-point retain factor for the PDU
+    # per-program engine cache: one compiled scan per backend
+    _engines: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_sources(self) -> int:
@@ -108,49 +120,54 @@ def compile_network(
     )
 
 
-def _timestep(program: CerebraSProgram, carry, ext_spikes_t):
-    """One accelerator timestep for a batch of ext spike vectors.
+def make_engine(program: CerebraSProgram,
+                backend: str = "reference") -> SpikeEngine:
+    """The program's SpikeEngine for ``backend`` (built once, then cached).
 
-    carry: {'v': (B, P) int32, 'spikes': (B, P) int32}
-    ext_spikes_t: (B, n_inputs) int32 in {0,1}
+    Cerebra-S kept the fixed-point multiplier, so the engine decays with
+    ``DecaySpec.mul`` — the truncating Q16.16 multiply — instead of the
+    H generation's shift decay.
     """
-    v, prev_spikes = carry["v"], carry["spikes"]
-    sources = jnp.concatenate(
-        [ext_spikes_t.astype(jnp.int32), prev_spikes], axis=-1
-    )  # (B, S)
-    # Accumulator: sum of weights of active sources. Spikes are 0/1 so this
-    # is exactly the bus's event-by-event accumulation, order-independent
-    # because int32 adds are associative (wrapping).
-    syn = jax.lax.dot_general(
-        sources,
-        program.weights_raw,
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )
-    # Potential decay unit: fixed-point multiply (truncating).
-    v_decayed = fxp.fx_mul(v, jnp.int32(program.decay_raw), program.config.fmt)
-    v_new = v_decayed + syn
-    thr = jnp.int32(program.params.threshold_raw)
-    spikes = (v_new >= thr).astype(jnp.int32)
-    if program.params.reset_mode == "zero":
-        v_out = jnp.where(spikes > 0, jnp.int32(0), v_new)
-    elif program.params.reset_mode == "subtract":
-        v_out = v_new - spikes * thr
-    else:  # hold
-        v_out = v_new
-    # Bus cost: one cycle per outgoing synapse of every spiking source.
+    engine = program._engines.get(backend)
+    if engine is None:
+        engine = SpikeEngine(
+            program.weights_raw,
+            program.n_inputs,
+            decay=DecaySpec.mul(program.decay_raw),
+            threshold_raw=program.params.threshold_raw,
+            reset_mode=program.params.reset_mode,
+            backend=backend,
+        )
+        program._engines[backend] = engine
+    return engine
+
+
+def cost_model(program: CerebraSProgram, ext_spikes, spikes) -> dict:
+    """Pure cycle/SOP accounting from a spike raster (no functional state).
+
+    Bus cost: the interconnect walks one outgoing synapse per clock, so
+    cycles(t) = Σ over spiking sources of their fanout, and every bus
+    event is exactly one synaptic operation.
+
+    Args:
+      ext_spikes: (T, B, n_inputs) external stimulus in {0,1}.
+      spikes: (T, B, n_physical) raster produced by the engine.
+    Returns:
+      {'cycles': (T, B) int32, 'sops': (T, B) int32}
+    """
+    sources = sources_raster(ext_spikes, spikes)
     fanout = jnp.asarray(program.fanout, jnp.int32)
-    cycles = jnp.sum(sources * fanout[None, :], axis=-1)  # (B,)
-    sops = cycles  # every bus event is one synaptic operation
-    return {"v": v_out, "spikes": spikes}, (spikes, cycles, sops)
+    cycles = jnp.sum(sources * fanout[None, None, :], axis=-1)
+    return {"cycles": cycles, "sops": cycles}
 
 
-def run(program: CerebraSProgram, ext_spikes):
+def run(program: CerebraSProgram, ext_spikes, backend: str = "reference"):
     """Run inference over a spike train.
 
     Args:
       program: compiled network.
       ext_spikes: (T, B, n_inputs) in {0,1} (any int/float dtype).
+      backend: SpikeEngine backend ("reference" | "pallas" | "pallas-mxu").
     Returns:
       dict with:
         'spikes': (T, B, n_physical) int32 spike raster,
@@ -158,21 +175,14 @@ def run(program: CerebraSProgram, ext_spikes):
         'cycles': (T, B) bus cycles per timestep,
         'sops': (T, B) synaptic ops per timestep.
     """
-    ext_spikes = jnp.asarray(ext_spikes)
-    T, B = ext_spikes.shape[0], ext_spikes.shape[1]
-    del T
-    n_phys = program.config.n_physical_neurons
-    carry = {
-        "v": lif_init((B, n_phys), fixed=True)["v"],
-        "spikes": jnp.zeros((B, n_phys), jnp.int32),
-    }
-    step = lambda c, x: _timestep(program, c, x)
-    _, (spikes, cycles, sops) = jax.lax.scan(step, carry, ext_spikes)
+    engine = make_engine(program, backend)
+    out = engine.run(ext_spikes)
+    spikes = out["spikes"]
+    cost = cost_model(program, ext_spikes, spikes)
     lo, hi = program.output_slice
-    output_counts = jnp.sum(spikes[:, :, lo:hi], axis=0)
     return {
         "spikes": spikes,
-        "output_counts": output_counts,
-        "cycles": cycles,
-        "sops": sops,
+        "output_counts": jnp.sum(spikes[:, :, lo:hi], axis=0),
+        "cycles": cost["cycles"],
+        "sops": cost["sops"],
     }

@@ -1,0 +1,272 @@
+"""SpikeEngine — the single timestep core every accelerator model runs on.
+
+The paper's central claim is that ONE fused accelerator timestep
+(event-gated weight fetch + accumulate + LIF fire/reset) serves both
+Cerebra generations and multiple co-resident models. This module is that
+timestep, in software: it owns the scan loop over time, the carries
+(membrane potential + previous-boundary spikes), and per-program jit
+caching, and dispatches the inner accumulate+fire to a pluggable backend:
+
+  ``"reference"``   pure-jnp int32 matmul + shared LIF epilogue. Bit-exact
+                    oracle semantics; fastest on CPU.
+  ``"pallas"``      the event-gated Pallas kernel
+                    (:func:`repro.kernels.ops.spike_timestep`): silent
+                    source blocks skip both compute and weight traffic.
+                    Bit-exact vs ``"reference"``. Interpreted on CPU,
+                    compiled Mosaic on TPU.
+  ``"pallas-mxu"``  same kernel with the f32 MXU accumulate. Exact only
+                    while per-output partial sums stay below 2^24; the
+                    bound is enforced AT ENGINE BUILD TIME from the weight
+                    image (worst-case per-block column sums), so a program
+                    that could ever produce an inexact sum refuses to
+                    compile instead of silently mis-accumulating.
+
+Frontends (``cerebra_s``, ``cerebra_h``, ``session``) contribute only a
+compile step (placement + quantized weight image + decay spec) and a pure
+cost-model pass over the resulting spike raster; the functional semantics
+live here, once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.lif import fire_reset, lif_init
+
+__all__ = [
+    "BACKENDS",
+    "MXU_EXACT_BOUND",
+    "DecaySpec",
+    "SpikeEngine",
+    "mxu_partial_sum_bound",
+    "sources_raster",
+]
+
+BACKENDS: tuple[str, ...] = ("reference", "pallas", "pallas-mxu")
+
+# f32 has a 24-bit significand: integer-valued accumulation stays exact
+# while every partial sum's magnitude is < 2^24.
+MXU_EXACT_BOUND: int = 1 << 24
+
+_MXU_BLOCK_SRC = 128  # source-block size the MXU accumulate reduces over
+
+
+@dataclasses.dataclass(frozen=True)
+class DecaySpec:
+    """Which Potential-Decay Unit the program compiled for.
+
+    ``kind='shift'`` — Cerebra-H arithmetic-shift decay; ``rate`` must be a
+    hardware-supported rate. ``kind='mul'`` — Cerebra-S truncating
+    fixed-point multiply; ``raw`` is the Q16.16 retain factor.
+    """
+
+    kind: str
+    rate: float = 0.0
+    raw: int = 0
+
+    @classmethod
+    def shift(cls, rate: float) -> "DecaySpec":
+        if rate not in fxp.SHIFT_DECAY_RATES:
+            raise ValueError(
+                f"shift decay rate {rate} not in {fxp.SHIFT_DECAY_RATES}"
+            )
+        return cls(kind="shift", rate=float(rate))
+
+    @classmethod
+    def mul(cls, raw: int) -> "DecaySpec":
+        # raw == 2^16 is beta = 1.0: fx_mul's hi/lo split is the exact
+        # identity there (a_hi*2^16 + a_lo == a), so leak-free IF neurons
+        # (decay_rate = 0.0) are a valid Cerebra-S configuration.
+        if not 0 <= raw <= (1 << 16):
+            raise ValueError(
+                f"mul retain factor {raw} outside [0, 2^16]"
+            )
+        return cls(kind="mul", raw=int(raw))
+
+    def apply(self, v):
+        if self.kind == "shift":
+            return fxp.shift_decay(v, self.rate)
+        if self.kind == "mul":
+            return fxp.fx_mul(v, jnp.int32(self.raw))
+        raise ValueError(f"unknown decay kind {self.kind!r}")
+
+
+def mxu_partial_sum_bound(weights_raw: np.ndarray,
+                          block_src: int = _MXU_BLOCK_SRC) -> int:
+    """Worst-case f32 partial-sum magnitude of the MXU accumulate.
+
+    The kernel reduces over source blocks of ``block_src`` rows; sources
+    are {0,1}, so the worst case for an output column is the sum of |w|
+    over one block. Inter-block accumulation happens in int32 and is
+    always exact, so only the intra-block bound matters.
+    """
+    w = np.abs(np.asarray(weights_raw, np.int64))
+    S = w.shape[0]
+    pad = (-S) % block_src
+    if pad:
+        w = np.pad(w, ((0, pad), (0, 0)))
+    blocks = w.reshape(-1, block_src, w.shape[1]).sum(axis=1)
+    return int(blocks.max()) if blocks.size else 0
+
+
+def sources_raster(ext_spikes, spikes):
+    """(T, B, S) source activity: external spikes + PREVIOUS-step spikes.
+
+    The accelerator captures array spikes at the timestep boundary, so the
+    sources of step t are the spikes of step t-1 (none before step 0).
+    The cost models consume this instead of re-running the scan.
+    """
+    ext = jnp.asarray(ext_spikes).astype(jnp.int32)
+    spk = jnp.asarray(spikes, jnp.int32)
+    prev = jnp.concatenate([jnp.zeros_like(spk[:1]), spk[:-1]], axis=0)
+    return jnp.concatenate([ext, prev], axis=-1)
+
+
+class SpikeEngine:
+    """One physical neuron array stepping under a fixed LIF configuration.
+
+    The engine is the only owner of the functional timestep:
+
+        sources_t = concat(external_t, spikes_{t-1})          # (B, S)
+        syn_t     = sources_t @ W_raw                         # backend
+        v_t, spikes_t = fire_reset(decay(v_{t-1}) + syn_t)    # shared LIF
+
+    Construction validates the backend (including the pallas-mxu 2^24
+    exactness bound); :meth:`run` jit-compiles the whole scan once per
+    engine and reuses it across calls (per-program jit caching).
+    """
+
+    def __init__(
+        self,
+        weights_raw,
+        n_inputs: int,
+        *,
+        decay: DecaySpec,
+        threshold_raw: int,
+        reset_mode: str,
+        backend: str = "reference",
+        interpret: bool | None = None,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of {BACKENDS}"
+            )
+        weights_raw = jnp.asarray(weights_raw, jnp.int32)
+        if weights_raw.ndim != 2:
+            raise ValueError(
+                f"weights must be a flat (n_sources, n_phys) SRAM image, "
+                f"got shape {weights_raw.shape}"
+            )
+        n_sources, n_phys = weights_raw.shape
+        if not 0 <= n_inputs <= n_sources:
+            raise ValueError(
+                f"n_inputs={n_inputs} outside [0, {n_sources}]"
+            )
+        if n_inputs + n_phys != n_sources:
+            raise ValueError(
+                f"source axis {n_sources} != n_inputs {n_inputs} + "
+                f"n_phys {n_phys}: recurrent spikes could not be fed back"
+            )
+        if backend == "pallas-mxu":
+            worst = mxu_partial_sum_bound(np.asarray(weights_raw))
+            if worst >= MXU_EXACT_BOUND:
+                raise ValueError(
+                    f"pallas-mxu backend rejected at compile time: "
+                    f"worst-case f32 partial sum {worst} >= 2^24 "
+                    f"({MXU_EXACT_BOUND}); the MXU accumulate would not be "
+                    f"bit-exact for this weight image. Reduce fan-in or "
+                    f"weight magnitudes, or use backend='pallas'."
+                )
+        self.weights_raw = weights_raw
+        self.n_inputs = int(n_inputs)
+        self.n_phys = int(n_phys)
+        self.n_sources = int(n_sources)
+        self.decay = decay
+        self.threshold_raw = int(threshold_raw)
+        self.reset_mode = str(reset_mode)
+        self.backend = backend
+        self.interpret = interpret
+        self._run_jit = None  # compiled scan, built lazily once per engine
+
+    # ------------------------------------------------------------------
+    def init_carry(self, batch: int) -> dict:
+        """The unified initial accelerator state: V = 0, no prior spikes.
+
+        Both Cerebra generations power up with cleared membrane SRAM; this
+        is the single definition (via :func:`repro.core.lif.lif_init`)
+        that ``cerebra_s.run`` and ``cerebra_h.run`` previously duplicated
+        inconsistently.
+        """
+        return {
+            "v": lif_init((batch, self.n_phys), fixed=True)["v"],
+            "spikes": jnp.zeros((batch, self.n_phys), jnp.int32),
+        }
+
+    # ------------------------------------------------------------------
+    def _step(self, weights, carry, ext_t):
+        """One fused timestep for a batch of external spike vectors."""
+        sources = jnp.concatenate(
+            [ext_t.astype(jnp.int32), carry["spikes"]], axis=-1
+        )  # (B, S)
+        if self.backend == "reference":
+            syn = jax.lax.dot_general(
+                sources,
+                weights,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            v_new = self.decay.apply(carry["v"]) + syn
+            v_out, spikes = fire_reset(
+                v_new, jnp.int32(self.threshold_raw), self.reset_mode
+            )
+        else:
+            from repro.kernels import ops  # deferred: breaks import cycle
+
+            v_out, spikes = ops.spike_timestep(
+                sources,
+                weights,
+                carry["v"],
+                decay_kind=self.decay.kind,
+                decay_rate=self.decay.rate,
+                decay_raw=self.decay.raw,
+                threshold_raw=self.threshold_raw,
+                reset_mode=self.reset_mode,
+                use_mxu=(self.backend == "pallas-mxu"),
+                interpret=self.interpret,
+            )
+        return {"v": v_out, "spikes": spikes}, spikes
+
+    def step(self, carry, ext_t):
+        """Public single-step entry (closed-loop / streaming callers)."""
+        return self._step(self.weights_raw, carry, ext_t)
+
+    # ------------------------------------------------------------------
+    def _run_impl(self, weights, ext_spikes):
+        carry = self.init_carry(ext_spikes.shape[1])
+        step = lambda c, x: self._step(weights, c, x)
+        final, spikes = jax.lax.scan(step, carry, ext_spikes)
+        return {"spikes": spikes, "v_final": final["v"]}
+
+    def run(self, ext_spikes) -> dict:
+        """Scan the engine over a spike train.
+
+        Args:
+          ext_spikes: (T, B, n_inputs) in {0,1} (any int/float dtype).
+        Returns:
+          {'spikes': (T, B, n_phys) int32 raster,
+           'v_final': (B, n_phys) int32 membrane state after step T}.
+        """
+        ext_spikes = jnp.asarray(ext_spikes).astype(jnp.int32)
+        if ext_spikes.ndim != 3 or ext_spikes.shape[2] != self.n_inputs:
+            raise ValueError(
+                f"ext_spikes must be (T, B, {self.n_inputs}), "
+                f"got {ext_spikes.shape}"
+            )
+        if self._run_jit is None:
+            self._run_jit = jax.jit(self._run_impl)
+        return self._run_jit(self.weights_raw, ext_spikes)

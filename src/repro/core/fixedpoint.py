@@ -16,9 +16,7 @@ RTL semantics described in the paper:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -90,8 +88,9 @@ def fx_mul(a, b, fmt: FixedPointFormat = Q16_16):
         a = a_hi * 2^16 + a_lo   (a_hi = a >> 16 arithmetic, 0<=a_lo<2^16)
         floor(a*b / 2^16) = a_hi*b + floor(a_lo*b / 2^16)
 
-    Requires ``fmt.frac_bits == 16`` and ``0 <= b < 2^16`` (a decay/retain
-    factor in [0, 1) — beta = 1.0 must be handled as identity upstream).
+    Requires ``fmt.frac_bits == 16`` and ``0 <= b <= 2^16`` (a decay/retain
+    factor in [0, 1]; b = 2^16 reduces to the exact identity
+    a_hi*2^16 + a_lo == a, so beta = 1.0 needs no special casing).
     """
     if fmt.frac_bits != 16:
         raise ValueError("fx_mul split-multiply assumes Q*.16")
@@ -117,9 +116,13 @@ def _shift(v, k):
     return v >> k
 
 
-@partial(jax.jit, static_argnames=("rate",))
 def shift_decay(v, rate: float):
-    """Cerebra-H shift-based decay on raw int32 membrane potentials."""
+    """Cerebra-H shift-based decay on raw int32 membrane potentials.
+
+    Deliberately NOT wrapped in jax.jit: it is called from inside jitted
+    scan bodies and from inside Pallas kernel bodies (where a nested pjit
+    primitive would not lower to Mosaic).
+    """
     v = jnp.asarray(v, jnp.int32)
     if rate == 0.125:
         return (v - _shift(v, 3)).astype(jnp.int32)

@@ -37,6 +37,7 @@ __all__ = [
     "LIFParams",
     "LIFState",
     "lif_init",
+    "fire_reset",
     "lif_step_float",
     "lif_step_fixed",
     "surrogate_spike",
@@ -74,6 +75,35 @@ def lif_init(shape, *, fixed: bool = False):
     return {"v": jnp.zeros(shape, dtype)}
 
 
+def fire_reset(v_new, threshold, reset_mode: str):
+    """The hardware Potential-Adder epilogue: threshold compare + reset.
+
+    This is THE single definition of fire/reset semantics. Every datapath
+    (float software reference, int32 hardware model, the SpikeEngine
+    backends, and the Pallas kernel bodies) calls this function, so the
+    three reset modes can never drift apart between implementations.
+
+    Args:
+      v_new: (..., N) decayed-and-integrated membrane potential; float32
+        for the software path, int32 raw fixed point for the hardware path.
+      threshold: scalar of matching dtype (float threshold or raw Q-format
+        int32 threshold).
+    Returns:
+      (v_out, spikes) with spikes in {0,1} of ``v_new``'s dtype.
+    """
+    spikes = (v_new >= threshold).astype(v_new.dtype)
+    if reset_mode == "zero":
+        v_out = jnp.where(spikes > 0, jnp.zeros_like(v_new), v_new)
+    elif reset_mode == "subtract":
+        v_out = v_new - spikes * threshold
+    elif reset_mode == "hold":
+        v_out = v_new
+    else:
+        raise ValueError(f"unknown reset mode {reset_mode!r}; "
+                         f"expected one of {RESET_MODES}")
+    return v_out, spikes
+
+
 def lif_step_float(state, syn_input, params: LIFParams):
     """Software-reference LIF step (float32).
 
@@ -87,15 +117,8 @@ def lif_step_float(state, syn_input, params: LIFParams):
     v = state["v"]
     v_decayed = v * params.beta
     v_new = v_decayed + syn_input
-    spikes = (v_new >= params.threshold).astype(jnp.float32)
-    if params.reset_mode == "zero":
-        v_out = jnp.where(spikes > 0, 0.0, v_new)
-    elif params.reset_mode == "subtract":
-        v_out = v_new - spikes * params.threshold
-    elif params.reset_mode == "hold":
-        v_out = v_new
-    else:  # pragma: no cover - guarded by dataclass typing
-        raise ValueError(params.reset_mode)
+    v_out, spikes = fire_reset(v_new, jnp.float32(params.threshold),
+                               params.reset_mode)
     return {"v": v_out}, spikes
 
 
@@ -114,16 +137,8 @@ def lif_step_fixed(state, syn_input_raw, params: LIFParams):
     v_decayed = fxp.shift_decay(v, params.decay_rate)
     # Hardware adders wrap; jnp int32 add wraps too.
     v_new = v_decayed + syn_input_raw
-    thr = jnp.int32(params.threshold_raw)
-    spikes = (v_new >= thr).astype(jnp.int32)
-    if params.reset_mode == "zero":
-        v_out = jnp.where(spikes > 0, jnp.int32(0), v_new)
-    elif params.reset_mode == "subtract":
-        v_out = v_new - spikes * thr
-    elif params.reset_mode == "hold":
-        v_out = v_new
-    else:  # pragma: no cover
-        raise ValueError(params.reset_mode)
+    v_out, spikes = fire_reset(v_new, jnp.int32(params.threshold_raw),
+                               params.reset_mode)
     return {"v": v_out}, spikes
 
 

@@ -9,9 +9,14 @@ isolation), and exposes encode -> step -> decode as a closed loop.
 
 Co-residency is implemented exactly as the hardware does it: each deployed
 model occupies a contiguous physical cluster range; weights of different
-models occupy disjoint SRAM rows; a single fused timestep advances every
-resident model at once (they share the physical array but cannot interact —
-verified by tests/test_session.py).
+models occupy disjoint SRAM rows; and ``run_all`` advances every resident
+model in ONE fused SpikeEngine scan over the shared physical array —
+external sources concatenated, one weight image, per-model decoded outputs.
+Models sharing a LIF configuration (decay / threshold / reset — the
+hardware's global config registers) fuse into a single scan; models with
+different configurations form separate fused groups, mirroring the ASIC's
+per-configuration register banks. Isolation (a model's outputs are
+bit-identical to a solo deployment) is verified by tests/test_session.py.
 """
 
 from __future__ import annotations
@@ -22,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cerebra_h, coding
+from repro.core.engine import DecaySpec, SpikeEngine
 from repro.core.mapping import ClusterGeometry, Placement
 from repro.core.network import SNNetwork
 
@@ -37,13 +43,22 @@ class DeployedModel:
 
 
 class AcceleratorSession:
-    """Host-side runtime for one Cerebra-H accelerator instance."""
+    """Host-side runtime for one Cerebra-H accelerator instance.
 
-    def __init__(self, config: cerebra_h.CerebraHConfig | None = None):
+    ``backend`` selects the SpikeEngine backend for every inference run on
+    this session ("reference" | "pallas" | "pallas-mxu").
+    """
+
+    def __init__(self, config: cerebra_h.CerebraHConfig | None = None,
+                 backend: str = "reference"):
         self.config = config or cerebra_h.CerebraHConfig()
+        self.backend = backend
         self.models: dict[str, DeployedModel] = {}
         self._next_cluster = 0
         self._next_input = 0
+        # fused-engine cache: {(model names, lif signature): SpikeEngine};
+        # invalidated whenever the resident set changes.
+        self._fused_engines: dict = {}
 
     # ------------------------------------------------------------------
     @property
@@ -84,6 +99,7 @@ class AcceleratorSession:
         self.models[name] = model
         self._next_cluster += need
         self._next_input += net.n_inputs
+        self._fused_engines.clear()  # resident set changed
         return model
 
     # ------------------------------------------------------------------
@@ -96,21 +112,106 @@ class AcceleratorSession:
         model = self.models[name]
         spikes = coding.poisson_encode(key, intensities, num_steps,
                                        dtype=jnp.int32)
-        result = cerebra_h.run(model.program, spikes)
+        result = cerebra_h.run(model.program, spikes, backend=self.backend)
         result["predictions"] = jnp.argmax(result["output_counts"], axis=-1)
         return result
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _lif_signature(program: cerebra_h.CerebraHProgram):
+        """The global accelerator config a fused step must share."""
+        return (program.decay_rate, program.params.threshold_raw,
+                program.params.reset_mode)
+
+    def _fused_engine(self, members: list[DeployedModel]) -> SpikeEngine:
+        """One physical-array engine over the union of members' programs.
+
+        External sources are concatenated in deployment order; the
+        neuron-to-neuron rows of all members are summed — disjoint cluster
+        ranges guarantee the nonzero patterns cannot overlap, so the sum
+        IS the union SRAM image the hardware holds.
+        """
+        sig = self._lif_signature(members[0].program)
+        key = (tuple(m.name for m in members), sig, self.backend)
+        engine = self._fused_engines.get(key)
+        if engine is not None:
+            return engine
+        n_phys = self.geometry.n_physical
+        n_ext = sum(m.program.n_inputs for m in members)
+        W = jnp.zeros((n_ext + n_phys, n_phys), jnp.int32)
+        off = 0
+        for m in members:
+            flat = m.program.weights_raw.reshape(
+                m.program.n_sources, -1)  # (n_in_m + P, P)
+            n_in = m.program.n_inputs
+            W = W.at[off:off + n_in].set(flat[:n_in])
+            W = W.at[n_ext:].add(flat[n_in:])
+            off += n_in
+        decay_rate, threshold_raw, reset_mode = sig
+        engine = SpikeEngine(
+            W,
+            n_ext,
+            decay=DecaySpec.shift(decay_rate),
+            threshold_raw=threshold_raw,
+            reset_mode=reset_mode,
+            backend=self.backend,
+        )
+        self._fused_engines[key] = engine
+        return engine
 
     def run_all(self, inputs: dict, num_steps: int, key) -> dict:
         """Advance every resident model concurrently (shared array step).
 
         inputs: {name: (B, n_inputs) intensities}; all batches must match.
         Functionally each model is independent (disjoint clusters/rows);
-        we exploit that to fuse them into one physical-array program, the
-        same way the hardware timestep advances all clusters at once.
+        we exploit that to fuse them into one physical-array SpikeEngine
+        scan per LIF configuration — the same way the hardware timestep
+        advances all clusters at once. Each model is encoded with the SAME
+        key it would get from :meth:`run`, and its decoded outputs (and
+        cost-model accounting) are bit-identical to a solo deployment.
         """
-        results = {}
-        for name, intens in inputs.items():
-            results[name] = self.run(name, intens, num_steps, key)
+        members = [self.models[name] for name in inputs]
+        batches = {np.shape(inputs[m.name])[0] for m in members}
+        if len(batches) > 1:
+            raise ValueError(f"batch sizes differ across models: {batches}")
+
+        # encode per model with the same key run() uses -> solo-identical
+        ext = {
+            m.name: coding.poisson_encode(
+                key, inputs[m.name], num_steps, dtype=jnp.int32)
+            for m in members
+        }
+
+        # group by shared accelerator configuration (hardware config regs)
+        groups: dict = {}
+        for m in members:
+            groups.setdefault(self._lif_signature(m.program), []).append(m)
+
+        npc = self.geometry.neurons_per_cluster
+        results: dict = {}
+        for group in groups.values():
+            engine = self._fused_engine(group)
+            fused_ext = jnp.concatenate([ext[m.name] for m in group], axis=-1)
+            raster = engine.run(fused_ext)["spikes"]  # (T, B, P) one scan
+            for m in group:
+                lo, hi = m.cluster_range
+                # mask to the model's cluster range: bit-identical to the
+                # raster a solo deployment produces (other slots silent)
+                mask = jnp.zeros((raster.shape[-1],), jnp.int32)
+                mask = mask.at[lo * npc:hi * npc].set(1)
+                spikes = raster * mask[None, None, :]
+                prog = m.program
+                cost = cerebra_h.cost_model(prog, ext[m.name], spikes)
+                out_counts = jnp.sum(
+                    spikes[:, :, jnp.asarray(prog.output_map)], axis=0)
+                results[m.name] = {
+                    "spikes": spikes,
+                    "output_counts": out_counts,
+                    "cycles": cost["cycles"],
+                    "sops": cost["sops"],
+                    "row_fetches": cost["row_fetches"],
+                    "predictions": jnp.argmax(out_counts, axis=-1),
+                }
         return results
 
     def utilization(self) -> dict:

@@ -1,0 +1,78 @@
+"""Shared PDU + Potential-Adder epilogue for the Pallas kernel bodies.
+
+Both fused kernels (``lif_step`` and ``spike_timestep``) end a timestep the
+same way the ASIC does: decay the previous membrane potential, add the
+accumulated synaptic input, compare against the threshold, apply the reset
+mode. The fire/reset semantics live in ONE place —
+:func:`repro.core.lif.fire_reset` — and the decay dispatch lives here, so
+the kernels, the SpikeEngine reference backend, and the float software
+reference can never drift apart.
+
+The ``repro.core`` imports are deliberately deferred to trace time: the
+kernels package must stay importable without triggering the core package
+(core's engine imports the kernels, and eager imports here would close an
+import cycle).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["DECAY_KINDS", "SHIFT_RATES", "validate_decay", "decay_and_fire"]
+
+# "shift" — Cerebra-H arithmetic-shift decay, rate in {.125,.25,.5,.75}.
+# "mul"   — Cerebra-S truncating fixed-point multiply by a raw Q16.16
+#           retain factor (the S generation kept the multiplier).
+DECAY_KINDS: tuple[str, ...] = ("shift", "mul")
+
+# mirror of repro.core.fixedpoint.SHIFT_DECAY_RATES (kept literal so the
+# kernels package needs no eager core import)
+SHIFT_RATES: tuple[float, ...] = (0.125, 0.25, 0.5, 0.75)
+
+
+def validate_decay(decay_kind: str, decay_rate: float, decay_raw: int):
+    """Fail at the kernel-build call site, not from inside a traced body.
+
+    Without this, a missing/mismatched decay parameter (e.g. the default
+    ``decay_rate=0.0`` with ``decay_kind='shift'``) would only surface as
+    a ValueError deep inside fixedpoint.py during kernel tracing.
+    """
+    if decay_kind == "shift":
+        if decay_rate not in SHIFT_RATES:
+            raise ValueError(
+                f"decay_kind='shift' needs decay_rate in {SHIFT_RATES}, "
+                f"got {decay_rate} (did you forget to pass decay_rate?)"
+            )
+    elif decay_kind == "mul":
+        if not 0 <= decay_raw <= (1 << 16):
+            raise ValueError(
+                f"decay_kind='mul' needs decay_raw in [0, 2^16], got "
+                f"{decay_raw} (did you forget to pass decay_raw?)"
+            )
+    else:
+        raise ValueError(
+            f"unknown decay kind {decay_kind!r}; expected one of "
+            f"{DECAY_KINDS}"
+        )
+
+
+def decay_and_fire(v, acc, *, decay_kind: str, decay_rate: float,
+                   decay_raw: int, threshold_raw: int, reset_mode: str):
+    """Decay previous potential, integrate, fire, reset. All int32.
+
+    Pure jnp ops only (shifts, bitwise, wrapping adds) so it traces inside
+    Pallas kernel bodies and inside plain jitted scan bodies alike.
+    Returns (v_out, spikes) int32.
+    """
+    from repro.core import fixedpoint as fxp
+    from repro.core.lif import fire_reset
+
+    if decay_kind == "shift":
+        v_decayed = fxp.shift_decay(v, decay_rate)
+    elif decay_kind == "mul":
+        v_decayed = fxp.fx_mul(v, jnp.int32(decay_raw))
+    else:
+        raise ValueError(
+            f"unknown decay kind {decay_kind!r}; expected one of {DECAY_KINDS}"
+        )
+    return fire_reset(v_decayed + acc, jnp.int32(threshold_raw), reset_mode)

@@ -19,36 +19,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU target)
 
+from repro.kernels.epilogue import decay_and_fire, validate_decay
+
 __all__ = ["lif_step_kernel", "build_lif_step"]
-
-
-def _decay(v, rate: float):
-    if rate == 0.125:
-        return v - (v >> 3)
-    if rate == 0.25:
-        return v - (v >> 2)
-    if rate == 0.5:
-        return v - (v >> 1)
-    if rate == 0.75:
-        return v >> 2
-    raise ValueError(f"unsupported hardware decay rate {rate}")
 
 
 def lif_step_kernel(v_ref, syn_ref, vout_ref, spk_ref, *, decay_rate: float,
                     threshold_raw: int, reset_mode: str):
-    v = v_ref[...]
-    syn = syn_ref[...]
-    v_new = _decay(v, decay_rate) + syn
-    thr = jnp.int32(threshold_raw)
-    spikes = (v_new >= thr).astype(jnp.int32)
-    if reset_mode == "zero":
-        vout = jnp.where(spikes > 0, jnp.int32(0), v_new)
-    elif reset_mode == "subtract":
-        vout = v_new - spikes * thr
-    elif reset_mode == "hold":
-        vout = v_new
-    else:
-        raise ValueError(reset_mode)
+    vout, spikes = decay_and_fire(
+        v_ref[...], syn_ref[...],
+        decay_kind="shift", decay_rate=decay_rate, decay_raw=0,
+        threshold_raw=threshold_raw, reset_mode=reset_mode,
+    )
     vout_ref[...] = vout
     spk_ref[...] = spikes
 
@@ -61,6 +43,7 @@ def build_lif_step(shape, *, decay_rate: float, threshold_raw: int,
     Caller guarantees rows % block_rows == 0 and cols % block_cols == 0
     (ops.py pads). Returns fn(v, syn) -> (v_out, spikes).
     """
+    validate_decay("shift", decay_rate, 0)
     rows, cols = shape
     block_rows = min(block_rows, rows)
     block_cols = min(block_cols, cols)

@@ -66,10 +66,12 @@ def lif_step(v, syn, *, decay_rate: float, threshold_raw: int,
 @functools.partial(
     jax.jit,
     static_argnames=("decay_rate", "threshold_raw", "reset_mode",
+                     "decay_kind", "decay_raw",
                      "use_mxu", "block_batch", "block_src", "interpret"),
 )
-def spike_timestep(sources, weights, v, *, decay_rate: float,
+def spike_timestep(sources, weights, v, *, decay_rate: float = 0.0,
                    threshold_raw: int, reset_mode: str = "zero",
+                   decay_kind: str = "shift", decay_raw: int = 0,
                    use_mxu: bool = False, block_batch: int = 8,
                    block_src: int = 128, interpret: bool | None = None):
     """One fused, event-gated accelerator timestep.
@@ -77,10 +79,15 @@ def spike_timestep(sources, weights, v, *, decay_rate: float,
     sources: (B, S) int/bool spikes; weights: (S, P) int32 raw Q16.16;
     v: (B, P) int32. Returns (v_out, spikes_out), each (B, P) int32.
 
+    ``decay_kind='shift'`` (default) applies the Cerebra-H shift decay of
+    ``decay_rate``; ``decay_kind='mul'`` applies the Cerebra-S fixed-point
+    multiply by the raw Q16.16 retain factor ``decay_raw``.
+
     ``use_mxu=False`` (default) is bit-exact. ``use_mxu=True`` runs the
     accumulate on the MXU in f32 — exact only while per-output partial sums
     stay below 2^24 (fine for |w| <~ 1.0 Q16.16 and fan-in <= 256; the SNN
-    trainer's weight clip guarantees it).
+    trainer's weight clip guarantees it). The SpikeEngine enforces this
+    bound from weight stats before selecting the mode.
     """
     interpret = on_cpu() if interpret is None else interpret
     B, S = sources.shape
@@ -103,6 +110,8 @@ def spike_timestep(sources, weights, v, *, decay_rate: float,
         decay_rate=decay_rate,
         threshold_raw=threshold_raw,
         reset_mode=reset_mode,
+        decay_kind=decay_kind,
+        decay_raw=decay_raw,
         block_batch=block_batch,
         block_src=block_src,
         use_mxu=use_mxu,

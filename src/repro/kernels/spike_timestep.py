@@ -37,19 +37,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.epilogue import decay_and_fire, validate_decay
+
 __all__ = ["spike_timestep_kernel", "build_spike_timestep"]
-
-
-def _decay(v, rate: float):
-    if rate == 0.125:
-        return v - (v >> 3)
-    if rate == 0.25:
-        return v - (v >> 2)
-    if rate == 0.5:
-        return v - (v >> 1)
-    if rate == 0.75:
-        return v >> 2
-    raise ValueError(f"unsupported hardware decay rate {rate}")
 
 
 def spike_timestep_kernel(
@@ -61,7 +51,9 @@ def spike_timestep_kernel(
     spk_ref,      # (Bb, P) int32
     acc_ref,      # scratch (Bb, P) int32
     *,
+    decay_kind: str,
     decay_rate: float,
+    decay_raw: int,
     threshold_raw: int,
     reset_mode: str,
     use_mxu: bool,
@@ -98,15 +90,12 @@ def spike_timestep_kernel(
 
     @pl.when(s == ns - 1)  # LIF epilogue once accumulation is complete
     def _fire():
-        v_new = _decay(v_ref[...], decay_rate) + acc_ref[...]
-        thr = jnp.int32(threshold_raw)
-        spikes = (v_new >= thr).astype(jnp.int32)
-        if reset_mode == "zero":
-            vout = jnp.where(spikes > 0, jnp.int32(0), v_new)
-        elif reset_mode == "subtract":
-            vout = v_new - spikes * thr
-        else:  # hold
-            vout = v_new
+        vout, spikes = decay_and_fire(
+            v_ref[...], acc_ref[...],
+            decay_kind=decay_kind, decay_rate=decay_rate,
+            decay_raw=decay_raw, threshold_raw=threshold_raw,
+            reset_mode=reset_mode,
+        )
         vout_ref[...] = vout
         spk_ref[...] = spikes
 
@@ -116,9 +105,11 @@ def build_spike_timestep(
     n_sources: int,
     n_phys: int,
     *,
-    decay_rate: float,
+    decay_rate: float = 0.0,
     threshold_raw: int,
     reset_mode: str,
+    decay_kind: str = "shift",
+    decay_raw: int = 0,
     block_batch: int = 8,
     block_src: int = 128,
     use_mxu: bool = False,
@@ -126,12 +117,17 @@ def build_spike_timestep(
 ):
     """Build fn(activity, sources, weights, v) -> (v_out, spikes).
 
+    ``decay_kind='shift'`` uses the Cerebra-H shift decay (``decay_rate``);
+    ``decay_kind='mul'`` uses the Cerebra-S fixed-point multiply by the raw
+    Q16.16 retain factor ``decay_raw``.
+
     Shapes (pre-padded by ops.py):
       activity: (batch//block_batch, n_sources//block_src) int32
       sources:  (batch, n_sources) int32 {0,1}
       weights:  (n_sources, n_phys) int32
       v:        (batch, n_phys) int32
     """
+    validate_decay(decay_kind, decay_rate, decay_raw)
     if batch % block_batch or n_sources % block_src:
         raise ValueError("shapes must be pre-padded to block multiples")
     if n_phys % 128:
@@ -140,7 +136,9 @@ def build_spike_timestep(
     ns = n_sources // block_src
     kernel = functools.partial(
         spike_timestep_kernel,
+        decay_kind=decay_kind,
         decay_rate=decay_rate,
+        decay_raw=decay_raw,
         threshold_raw=threshold_raw,
         reset_mode=reset_mode,
         use_mxu=use_mxu,

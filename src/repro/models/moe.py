@@ -233,11 +233,16 @@ def moe_forward_ep(p: dict, x, cfg: TransformerConfig, *,
                 hs @ pl["shared_w_down"].astype(xl.dtype), "model")
         return out.reshape(Bl, S, d), aux
 
-    fn = jax.shard_map(
+    if hasattr(jax, "shard_map"):
+        smap, relax = jax.shard_map, {"check_vma": False}
+    else:  # pre-0.6 jax spells it jax.experimental.shard_map
+        from jax.experimental.shard_map import shard_map as smap
+        relax = {"check_rep": False}
+    fn = smap(
         block, mesh=mesh,
         in_specs=(P(batch_axes if len(batch_axes) > 1 else batch_axes[0]),
                   w_spec),
         out_specs=(P(batch_axes if len(batch_axes) > 1 else batch_axes[0]),
                    P()),
-        check_vma=False)
+        **relax)
     return fn(x, p)

@@ -101,9 +101,11 @@ def train(config: TrainConfig, data_iter, *, params=None, opt_state=None,
 # --------------------------------------------------------------------------
 def evaluate_dual(params, config: SNNModelConfig, images, labels, *,
                   num_steps_time: int, seed: int = 0,
-                  h_config: cerebra_h.CerebraHConfig | None = None) -> dict:
+                  h_config: cerebra_h.CerebraHConfig | None = None,
+                  backend: str = "reference") -> dict:
     """Software vs hardware accuracy on identical spike trains.
 
+    ``backend`` selects the SpikeEngine backend for the hardware model.
     Returns {'software_acc', 'hardware_acc', 'deviation_pct', 'agreement'}.
     """
     net = to_snnetwork(params, config)
@@ -116,7 +118,7 @@ def evaluate_dual(params, config: SNNModelConfig, images, labels, *,
     sw_pred = np.asarray(jnp.argmax(sw["output_counts"], -1))
 
     program = cerebra_h.compile_network(net, h_config)
-    hw = cerebra_h.run(program, spikes)
+    hw = cerebra_h.run(program, spikes, backend=backend)
     hw_pred = np.asarray(jnp.argmax(hw["output_counts"], -1))
 
     sw_acc = float((sw_pred == labels).mean())

@@ -1,0 +1,255 @@
+"""SpikeEngine backend-parity and routing contracts.
+
+The engine is the single functional timestep; every backend must agree
+BIT-exactly on the integer path, and both Cerebra frontends must actually
+route through it (the Pallas kernel on the real inference path is the
+paper's central claim, and PR 1's acceptance criterion).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cerebra_h, cerebra_s
+from repro.core import fixedpoint as fxp
+from repro.core.engine import (
+    MXU_EXACT_BOUND,
+    DecaySpec,
+    SpikeEngine,
+    mxu_partial_sum_bound,
+)
+from repro.core.mapping import ClusterGeometry
+
+from conftest import make_random_net
+
+THRESH = 1 << 16  # 1.0 in Q16.16
+
+# deliberately ragged (non-block-multiple) shapes: B % 8 != 0, S % 128 != 0
+RAGGED_SHAPES = [
+    # (B, n_inputs, n_phys)
+    (3, 37, 48),
+    (1, 1, 1),
+    (5, 200, 130),
+]
+
+
+def _random_engine_io(rng, B, n_in, n_phys, T=6, density=0.3, wmax=1 << 14):
+    S = n_in + n_phys
+    W = (rng.random((S, n_phys)) < density) * rng.integers(
+        -wmax, wmax, (S, n_phys))
+    ext = (rng.random((T, B, n_in)) < 0.35).astype(np.int32)
+    return jnp.asarray(W, jnp.int32), ext
+
+
+def _run_pair(W, n_in, ext, decay, reset, backend):
+    a = SpikeEngine(W, n_in, decay=decay, threshold_raw=THRESH,
+                    reset_mode=reset, backend="reference").run(ext)
+    b = SpikeEngine(W, n_in, decay=decay, threshold_raw=THRESH,
+                    reset_mode=reset, backend=backend).run(ext)
+    return a, b
+
+
+@pytest.mark.parametrize("rate", fxp.SHIFT_DECAY_RATES)
+@pytest.mark.parametrize("reset", ["zero", "subtract", "hold"])
+def test_backend_parity_shift_decay(rng, rate, reset):
+    """reference vs pallas: bit-exact across every reset mode and every
+    hardware decay rate (the full Cerebra-H configuration space)."""
+    B, n_in, n_phys = 3, 37, 48
+    W, ext = _random_engine_io(rng, B, n_in, n_phys)
+    ref, pal = _run_pair(W, n_in, ext, DecaySpec.shift(rate), reset, "pallas")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(pal["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["v_final"]),
+                                  np.asarray(pal["v_final"]))
+
+
+@pytest.mark.parametrize("B,n_in,n_phys", RAGGED_SHAPES)
+def test_backend_parity_ragged_shapes(rng, B, n_in, n_phys):
+    """Padding to kernel blocks must never leak into results."""
+    W, ext = _random_engine_io(rng, B, n_in, n_phys)
+    ref, pal = _run_pair(W, n_in, ext, DecaySpec.shift(0.25), "zero",
+                         "pallas")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(pal["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["v_final"]),
+                                  np.asarray(pal["v_final"]))
+
+
+@pytest.mark.parametrize("reset", ["zero", "subtract", "hold"])
+def test_backend_parity_mul_decay(rng, reset):
+    """The Cerebra-S truncating-multiply PDU through the Pallas kernel."""
+    B, n_in, n_phys = 3, 20, 24
+    W, ext = _random_engine_io(rng, B, n_in, n_phys)
+    decay = DecaySpec.mul(int(round(0.7 * 65536)))
+    ref, pal = _run_pair(W, n_in, ext, decay, reset, "pallas")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(pal["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["v_final"]),
+                                  np.asarray(pal["v_final"]))
+
+
+def test_backend_parity_mxu_within_bound(rng):
+    B, n_in, n_phys = 4, 60, 40
+    W, ext = _random_engine_io(rng, B, n_in, n_phys, wmax=1 << 13)
+    assert mxu_partial_sum_bound(np.asarray(W)) < MXU_EXACT_BOUND
+    ref, mxu = _run_pair(W, n_in, ext, DecaySpec.shift(0.5), "zero",
+                         "pallas-mxu")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(mxu["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["v_final"]),
+                                  np.asarray(mxu["v_final"]))
+
+
+def test_mxu_bound_enforced_at_build_time():
+    """A weight image that could overflow the f32 significand must refuse
+    to compile for pallas-mxu instead of silently mis-accumulating."""
+    n_phys = 8
+    n_in = 130  # > one source block, all max-magnitude weights
+    W = np.full((n_in + n_phys, n_phys), 1 << 18, np.int32)
+    assert mxu_partial_sum_bound(W) >= MXU_EXACT_BOUND
+    with pytest.raises(ValueError, match="2\\^24"):
+        SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                    threshold_raw=THRESH, reset_mode="zero",
+                    backend="pallas-mxu")
+    # the exact same program compiles fine on the exact backends
+    SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25), threshold_raw=THRESH,
+                reset_mode="zero", backend="pallas")
+
+
+def test_leak_free_if_neuron_supported(rng):
+    """beta = 1.0 (decay_rate = 0, a leak-free IF neuron) is a valid
+    Cerebra-S configuration: decay_raw = 2^16 is the exact fx_mul
+    identity and must compile + run on every backend."""
+    net = make_random_net(rng, n_in=6, n_neurons=10, density=0.4,
+                          decay_rate=0.0)
+    prog = cerebra_s.compile_network(
+        net, cerebra_s.CerebraSConfig(n_physical_neurons=16))
+    assert prog.decay_raw == 1 << 16
+    ext = (rng.random((8, 2, 6)) < 0.4).astype(np.int32)
+    ref = cerebra_s.run(prog, ext)
+    pal = cerebra_s.run(prog, ext, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(pal["spikes"]))
+    # no decay: with hold reset and no input after t0, v must not change
+    W = jnp.zeros((3 + 2, 2), jnp.int32)
+    eng = SpikeEngine(W, 3, decay=DecaySpec.mul(1 << 16),
+                      threshold_raw=THRESH, reset_mode="hold")
+    carry = {"v": jnp.asarray([[123, -77]], jnp.int32),
+             "spikes": jnp.zeros((1, 2), jnp.int32)}
+    carry, _ = eng.step(carry, jnp.zeros((1, 3), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(carry["v"]), [[123, -77]])
+
+
+def test_kernel_decay_misconfiguration_fails_at_build(rng):
+    """Forgetting decay_rate for the shift PDU must fail with a pointed
+    error at the call site, not a trace-time ValueError in fixedpoint."""
+    from repro.kernels import ops
+
+    src = jnp.zeros((2, 8), jnp.int32)
+    W = jnp.zeros((8, 8), jnp.int32)
+    v = jnp.zeros((2, 8), jnp.int32)
+    with pytest.raises(ValueError, match="decay_rate"):
+        ops.spike_timestep(src, W, v, threshold_raw=THRESH)
+
+
+def test_unknown_backend_rejected(rng):
+    W, _ = _random_engine_io(rng, 1, 4, 4)
+    with pytest.raises(ValueError, match="backend"):
+        SpikeEngine(W, 4, decay=DecaySpec.shift(0.25), threshold_raw=THRESH,
+                    reset_mode="zero", backend="cuda")
+
+
+# --------------------------------------------------------------------------
+# Frontend routing: the acceptance criterion — Cerebra-H inference with
+# backend="pallas" matches the reference raster bit-exactly.
+# --------------------------------------------------------------------------
+
+_SMALL_GEOM = ClusterGeometry(n_clusters=4, neurons_per_cluster=4,
+                              clusters_per_group=2, rows_per_group=64,
+                              clusters_per_l1=2)
+
+
+def test_cerebra_h_pallas_on_inference_path(rng):
+    net = make_random_net(rng, n_in=5, n_neurons=12, density=0.5,
+                          decay_rate=0.25)
+    prog = cerebra_h.compile_network(
+        net, cerebra_h.CerebraHConfig(geometry=_SMALL_GEOM))
+    ext = (rng.random((10, 3, 5)) < 0.4).astype(np.int32)
+    ref = cerebra_h.run(prog, ext, backend="reference")
+    pal = cerebra_h.run(prog, ext, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(pal["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["output_counts"]),
+                                  np.asarray(pal["output_counts"]))
+    # the cost model is a pure pass over the raster -> identical accounting
+    for k in ("cycles", "sops", "row_fetches"):
+        np.testing.assert_array_equal(np.asarray(ref[k]), np.asarray(pal[k]))
+
+
+def test_cerebra_s_pallas_on_inference_path(rng):
+    net = make_random_net(rng, n_in=6, n_neurons=10, density=0.4,
+                          decay_rate=0.3, reset_mode="subtract")
+    prog = cerebra_s.compile_network(
+        net, cerebra_s.CerebraSConfig(n_physical_neurons=16))
+    ext = (rng.random((8, 2, 6)) < 0.4).astype(np.int32)
+    ref = cerebra_s.run(prog, ext)
+    pal = cerebra_s.run(prog, ext, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(pal["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["cycles"]),
+                                  np.asarray(pal["cycles"]))
+
+
+def test_both_generations_route_through_spike_engine(rng):
+    """cerebra_s.run and cerebra_h.run share ONE timestep core."""
+    netS = make_random_net(rng, n_in=4, n_neurons=8)
+    progS = cerebra_s.compile_network(
+        netS, cerebra_s.CerebraSConfig(n_physical_neurons=16))
+    netH = make_random_net(rng, n_in=4, n_neurons=8)
+    progH = cerebra_h.compile_network(
+        netH, cerebra_h.CerebraHConfig(geometry=_SMALL_GEOM))
+    engS = cerebra_s.make_engine(progS)
+    engH = cerebra_h.make_engine(progH)
+    assert isinstance(engS, SpikeEngine) and isinstance(engH, SpikeEngine)
+    # S kept the fixed-point multiplier; H uses the shift PDU
+    assert engS.decay.kind == "mul"
+    assert engH.decay.kind == "shift"
+
+
+def test_per_program_engine_and_jit_caching(rng):
+    net = make_random_net(rng, n_in=4, n_neurons=8)
+    prog = cerebra_h.compile_network(
+        net, cerebra_h.CerebraHConfig(geometry=_SMALL_GEOM))
+    e1 = cerebra_h.make_engine(prog, "reference")
+    e2 = cerebra_h.make_engine(prog, "reference")
+    assert e1 is e2  # one engine per (program, backend)
+    ext = (rng.random((4, 2, 4)) < 0.4).astype(np.int32)
+    e1.run(ext)
+    compiled = e1._run_jit
+    assert compiled is not None
+    e1.run(ext)
+    assert e1._run_jit is compiled  # the compiled scan is reused
+
+
+# --------------------------------------------------------------------------
+# Satellite bugfix regression: ONE initial-membrane-state definition.
+# --------------------------------------------------------------------------
+
+def test_initial_membrane_state_unified(rng):
+    """Both generations power up with V = 0 (int32 raw, via lif_init) and
+    no prior boundary spikes — one definition, pinned here."""
+    netS = make_random_net(rng, n_in=4, n_neurons=8)
+    progS = cerebra_s.compile_network(
+        netS, cerebra_s.CerebraSConfig(n_physical_neurons=16))
+    netH = make_random_net(rng, n_in=4, n_neurons=8)
+    progH = cerebra_h.compile_network(
+        netH, cerebra_h.CerebraHConfig(geometry=_SMALL_GEOM))
+    for engine in (cerebra_s.make_engine(progS),
+                   cerebra_h.make_engine(progH)):
+        carry = engine.init_carry(3)
+        assert carry["v"].dtype == jnp.int32
+        assert carry["spikes"].dtype == jnp.int32
+        assert not np.asarray(carry["v"]).any()
+        assert not np.asarray(carry["spikes"]).any()
+        # both come from the same method on the same class
+        assert type(engine).init_carry is SpikeEngine.init_carry

@@ -13,6 +13,13 @@ from repro.hlo_analysis import analyze_hlo
 L, B, D = 6, 4, 64
 
 
+def _cost(compiled) -> dict:
+    """jax's Compiled.cost_analysis() returns a dict on some versions and
+    a single-element list of dicts on others — normalize."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, list) else ca
+
+
 def _body(x, w):
     return jnp.tanh(x @ w), None
 
@@ -40,7 +47,7 @@ def compiled_pair():
 def test_matches_xla_on_unrolled(compiled_pair):
     _, cu = compiled_pair
     got = analyze_hlo(cu.as_text())
-    want = cu.cost_analysis()
+    want = _cost(cu)
     # dot flops must match exactly; elementwise conventions differ slightly
     dot_flops = L * 2 * B * D * D
     assert got.flops >= dot_flops
@@ -52,7 +59,7 @@ def test_matches_xla_on_unrolled(compiled_pair):
 def test_corrects_scan_undercount(compiled_pair):
     cs, cu = compiled_pair
     got_s = analyze_hlo(cs.as_text())
-    xla_s = cs.cost_analysis()
+    xla_s = _cost(cs)
     dot_flops = L * 2 * B * D * D
     # XLA counts the body once -> ~1/L of the true dot flops
     assert float(xla_s["flops"]) < dot_flops
@@ -72,10 +79,17 @@ def test_collectives_multiplied_by_trip_count():
         y = jax.lax.psum(y, "model")
         return y, None
 
+    if hasattr(jax, "shard_map"):
+        smap = jax.shard_map
+        relax = {"check_vma": False}
+    else:  # pre-0.6 spelling
+        from jax.experimental.shard_map import shard_map as smap
+        relax = {"check_rep": False}
+
     def f(x, W):
         return jax.lax.scan(
-            jax.shard_map(body, mesh=mesh, in_specs=(P(), P()),
-                          out_specs=(P(), P()), check_vma=False),
+            smap(body, mesh=mesh, in_specs=(P(), P()),
+                 out_specs=(P(), P()), **relax),
             x, W)[0].sum()
 
     x = jax.ShapeDtypeStruct((B, D), jnp.float32)

@@ -1,10 +1,12 @@
-"""Multi-model co-residency (paper §V-D): address-space isolation."""
+"""Multi-model co-residency (paper §V-D): address-space isolation AND
+true fusion — run_all advances all resident models in one engine scan."""
 
 import jax
 import numpy as np
 import pytest
 
 from repro.core import cerebra_h
+from repro.core.engine import SpikeEngine
 from repro.core.session import AcceleratorSession
 
 from conftest import make_ff_net
@@ -34,6 +36,121 @@ def test_co_residency_isolation(rng):
     np.testing.assert_array_equal(
         np.asarray(outA_solo["output_counts"]),
         np.asarray(outs["A"]["output_counts"]))
+
+
+def test_run_all_is_one_fused_scan(rng, monkeypatch):
+    """N co-resident models with a shared LIF config advance in EXACTLY one
+    SpikeEngine scan — no per-model Python loop over run()."""
+    sess = AcceleratorSession()
+    sess.deploy("A", make_ff_net(rng, sizes=(12, 40, 10)))
+    sess.deploy("B", make_ff_net(rng, sizes=(8, 30, 5), scale=0.9))
+    sess.deploy("C", make_ff_net(rng, sizes=(6, 20, 4)))
+
+    scans = []
+    orig_run = SpikeEngine.run
+    monkeypatch.setattr(SpikeEngine, "run",
+                        lambda self, ext: scans.append(self) or
+                        orig_run(self, ext))
+
+    def no_solo_run(*a, **k):  # run_all must not fall back to solo runs
+        raise AssertionError("run_all looped over per-model run()")
+    monkeypatch.setattr(AcceleratorSession, "run", no_solo_run)
+
+    xs = {"A": rng.random((4, 12)).astype(np.float32),
+          "B": rng.random((4, 8)).astype(np.float32),
+          "C": rng.random((4, 6)).astype(np.float32)}
+    outs = sess.run_all(xs, 15, jax.random.key(1))
+    assert len(scans) == 1  # one fused engine scan for all three models
+    assert set(outs) == {"A", "B", "C"}
+    # the fused engine covers the concatenated external sources
+    assert scans[0].n_inputs == 12 + 8 + 6
+
+
+def test_run_all_isolation_bit_exact_per_model(rng):
+    """Every co-resident model (not just the first) decodes identically to
+    its solo deployment at the same placement."""
+    nets = {"A": make_ff_net(rng, sizes=(12, 40, 10)),
+            "B": make_ff_net(rng, sizes=(8, 30, 5), scale=0.9)}
+    key = jax.random.key(3)
+    xs = {"A": rng.random((5, 12)).astype(np.float32),
+          "B": rng.random((5, 8)).astype(np.float32)}
+
+    both = AcceleratorSession()
+    for name, net in nets.items():
+        both.deploy(name, net)
+    outs = both.run_all(xs, 18, key)
+
+    # solo reference for B at the SAME placement: deploy a dummy A first
+    solo = AcceleratorSession()
+    for name, net in nets.items():
+        solo.deploy(name, net)
+    soloB = solo.run("B", xs["B"], 18, key)
+    np.testing.assert_array_equal(np.asarray(soloB["output_counts"]),
+                                  np.asarray(outs["B"]["output_counts"]))
+    np.testing.assert_array_equal(np.asarray(soloB["spikes"]),
+                                  np.asarray(outs["B"]["spikes"]))
+    for k in ("cycles", "sops", "row_fetches"):
+        np.testing.assert_array_equal(np.asarray(soloB[k]),
+                                      np.asarray(outs["B"][k]))
+
+
+def test_run_all_mixed_lif_configs_still_fused_per_group(rng, monkeypatch):
+    """Models with different LIF configs form separate fused groups (the
+    hardware's per-configuration register banks) — still no per-model
+    loop, and outputs still match solo deployment."""
+    netA = make_ff_net(rng, sizes=(10, 30, 6))
+    netB = make_ff_net(rng, sizes=(8, 20, 4), decay_rate=0.5)
+    sess = AcceleratorSession()
+    sess.deploy("A", netA)
+    sess.deploy("B", netB)
+
+    scans = []
+    orig_run = SpikeEngine.run
+    monkeypatch.setattr(SpikeEngine, "run",
+                        lambda self, ext: scans.append(self) or
+                        orig_run(self, ext))
+
+    key = jax.random.key(5)
+    xs = {"A": rng.random((3, 10)).astype(np.float32),
+          "B": rng.random((3, 8)).astype(np.float32)}
+    outs = sess.run_all(xs, 12, key)
+    assert len(scans) == 2  # one scan per LIF-config group
+
+    monkeypatch.undo()
+    solo = AcceleratorSession()
+    solo.deploy("A", netA)
+    soloA = solo.run("A", xs["A"], 12, key)
+    np.testing.assert_array_equal(np.asarray(soloA["output_counts"]),
+                                  np.asarray(outs["A"]["output_counts"]))
+
+
+def test_fused_engine_cache_keyed_on_backend(rng, monkeypatch):
+    """Switching sess.backend after a run_all must rebuild the fused
+    engine for the new backend, not reuse the cached one."""
+    sess = AcceleratorSession()
+    sess.deploy("A", make_ff_net(rng, sizes=(6, 10, 4)))
+    scans = []
+    orig_run = SpikeEngine.run
+    monkeypatch.setattr(SpikeEngine, "run",
+                        lambda self, ext: scans.append(self) or
+                        orig_run(self, ext))
+    xs = {"A": rng.random((2, 6)).astype(np.float32)}
+    key = jax.random.key(0)
+    sess.run_all(xs, 5, key)
+    assert scans[-1].backend == "reference"
+    sess.backend = "pallas"
+    sess.run_all(xs, 5, key)
+    assert scans[-1].backend == "pallas"
+
+
+def test_run_all_rejects_mismatched_batches(rng):
+    sess = AcceleratorSession()
+    sess.deploy("A", make_ff_net(rng, sizes=(6, 10, 4)))
+    sess.deploy("B", make_ff_net(rng, sizes=(6, 10, 4)))
+    with pytest.raises(ValueError, match="batch"):
+        sess.run_all({"A": np.zeros((2, 6), np.float32),
+                      "B": np.zeros((3, 6), np.float32)},
+                     5, jax.random.key(0))
 
 
 def test_group_boundary_isolation(rng):

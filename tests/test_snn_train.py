@@ -10,7 +10,7 @@ from repro.snn.model import SNNModelConfig, forward, init_params, to_snnetwork
 from repro.snn.train import TrainConfig, evaluate_dual, make_train_step, train
 
 
-def _cfg(hidden=32, T=10, steps=80):
+def _cfg(hidden=32, T=10, steps=140):
     return TrainConfig(
         model=SNNModelConfig(layer_sizes=(784, hidden, 10),
                              params=LIFParams(decay_rate=0.1)),

@@ -107,7 +107,7 @@ def test_lm_loss_decreases_on_structured_stream(rng):
         return optimizers.apply_updates(params, updates), opt_state, loss
 
     losses = []
-    for s, toks, tgts in lm.lm_batches(cfg.vocab_size, 8, 32, 40, seed=5):
+    for s, toks, tgts in lm.lm_batches(cfg.vocab_size, 8, 32, 64, seed=5):
         batch = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tgts)}
         params, opt_state, loss = step(params, opt_state, batch)
         losses.append(float(loss))
