@@ -20,6 +20,7 @@ import numpy as np
 from benchmarks.common import emit, time_call
 from repro.core.engine import BACKENDS, DecaySpec, SpikeEngine
 from repro.kernels import ops, ref
+from repro.serving.snn import SpikeServer
 
 
 def bench_engine_backends(backends, *, batch: int, activity: float,
@@ -41,6 +42,46 @@ def bench_engine_backends(backends, *, batch: int, activity: float,
              f"activity={activity} T={steps}")
 
 
+def bench_streaming(backends, *, n_slots: int, activity: float,
+                    chunk_steps: int = 8, rounds: int = 3) -> None:
+    """The serving axis: masked slot-batch chunk step (SpikeServer.feed)
+    vs the one-shot batch scan on the same raster, plus the cost of a
+    partially occupied slot batch (the serving occupancy regime)."""
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    T = chunk_steps * rounds
+    rasters = [
+        (rng.random((T, n_in)) < activity).astype(np.int32)
+        for _ in range(n_slots)
+    ]
+    batch = jnp.asarray(np.stack(rasters, axis=1))  # (T, n_slots, n_in)
+    for backend in backends:
+        engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero",
+                             backend=backend)
+        t_batch = time_call(lambda e=engine: e.run(batch)["spikes"])
+        emit(f"streaming/batch_scan_{backend}", t_batch / T,
+             f"us/timestep B={n_slots} T={T} (one-shot run)")
+
+        for occupancy in (1.0, 0.25):
+            n_live = max(1, int(round(occupancy * n_slots)))
+
+            def serve(e=engine, n_live=n_live):
+                srv = SpikeServer(e, n_slots=n_slots,
+                                  chunk_steps=chunk_steps)
+                uids = [srv.attach() for _ in range(n_live)]
+                for t0 in range(0, T, chunk_steps):
+                    srv.feed({u: rasters[i][t0:t0 + chunk_steps]
+                              for i, u in enumerate(uids)})
+                return srv.total_steps
+
+            t_srv = time_call(serve)
+            emit(f"streaming/feed_{backend}_occ{occupancy:g}", t_srv / T,
+                 f"us/timestep {n_live}/{n_slots} slots live, "
+                 f"chunk={chunk_steps} (masked step, per-chunk host hop)")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -49,11 +90,17 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", choices=list(BACKENDS) + ["all"],
                     default="all",
                     help="SpikeEngine backend(s) to benchmark")
+    ap.add_argument("--streaming", action="store_true",
+                    help="also benchmark the SpikeServer slot-batch path "
+                         "(masked chunk step vs one-shot batch scan)")
     args = ap.parse_args(argv)
     backends = list(BACKENDS) if args.backend == "all" else [args.backend]
 
     bench_engine_backends(backends, batch=args.batch,
                           activity=args.activity)
+    if args.streaming:
+        bench_streaming(backends, n_slots=args.batch,
+                        activity=args.activity)
 
     rng = np.random.default_rng(0)
     B, S, P = args.batch, 784 + 1024, 1024

@@ -11,6 +11,13 @@ The controller is hand-wired (no training): two antagonistic populations
 ("too high" / "too low") whose firing rates drive the actuator — the
 standard neuromorphic PID construction of Stagsted et al. [17].
 
+Since PR 2 the loop runs on the STREAMING path (``session.serve``): the
+controller attaches once as a persistent stream, membrane state carries
+across control ticks (the accelerator never resets mid-episode, exactly
+like the hardware), and each tick pushes one chunk of encoded error
+spikes through the shared compiled slot-batch step — the decoded actuator
+command of tick t shapes the encoder input of tick t+1.
+
     PYTHONPATH=src python examples/robot_control.py
 """
 
@@ -60,6 +67,11 @@ def main() -> None:
           f"{100 * sess.utilization()['neuron_utilization']:.1f}% of the "
           f"1024-neuron array — the paper's under-utilization story)")
 
+    # streaming closed loop: one persistent stream, membrane state carries
+    # across control ticks through the slot carry
+    stream = sess.serve("pid", n_slots=4, chunk_steps=8)
+    uid = stream.attach()
+
     # integrator plant (position control): x' = 0.8 u, setpoint 0.7
     x, setpoint, dt = 0.0, 0.7, 1.0
     u_max, err_scale, T = 0.25, 0.5, 24
@@ -69,20 +81,25 @@ def main() -> None:
     for t in range(30):
         err = setpoint - x
         sensor = np.asarray(
-            [[max(err, 0.0) / err_scale, max(-err, 0.0) / err_scale]],
+            [max(err, 0.0) / err_scale, max(-err, 0.0) / err_scale],
             np.float32)
         key, k = jax.random.split(key)
-        out = sess.run("pid", np.clip(sensor, 0, 1), T, k)
-        counts = np.asarray(out["output_counts"])[0]
+        ext = np.asarray(coding.poisson_encode(
+            k, np.clip(sensor, 0, 1), T, dtype=np.int32))  # (T, 2)
+        out = stream.feed(uid, ext)  # decoded output -> next tick's encoder
+        counts = np.asarray(out["output_counts"])
         rate_pos = counts[:n].mean() / T
         rate_neg = counts[n:2 * n].mean() / T
         u = float(u_max * (rate_pos - rate_neg))
         x = x + dt * 0.8 * u
         if t % 3 == 0:
             print(f"{t:>3} {x:>8.3f} {err:>8.3f} {u:>8.3f}")
+    stats = stream.detach(uid)
     assert abs(setpoint - x) < 0.15, "controller failed to converge"
-    print(f"[control] settled at x={x:.3f} (setpoint {setpoint}) — "
-          f"closed loop through encoder -> Cerebra-H -> decoder")
+    print(f"[control] settled at x={x:.3f} (setpoint {setpoint}) after "
+          f"{stats.steps} streamed timesteps — closed loop through "
+          f"encoder -> streaming Cerebra-H -> decoder, no state reset "
+          f"between ticks")
 
 
 if __name__ == "__main__":

@@ -192,6 +192,7 @@ class SpikeEngine:
         self.backend = backend
         self.interpret = interpret
         self._run_jit = None  # compiled scan, built lazily once per engine
+        self._chunk_jit = None  # compiled masked chunk step (streaming path)
 
     # ------------------------------------------------------------------
     def init_carry(self, batch: int) -> dict:
@@ -244,6 +245,61 @@ class SpikeEngine:
     def step(self, carry, ext_t):
         """Public single-step entry (closed-loop / streaming callers)."""
         return self._step(self.weights_raw, carry, ext_t)
+
+    # ------------------------------------------------------------------
+    # Streaming path: a fixed slot batch advanced T steps under a
+    # per-(step, slot) activity mask. Inactive slots keep their carry
+    # bit-for-bit (a paused stream must resume exactly where it stopped),
+    # which is what lets one compiled program serve churning traffic:
+    # the serving layer pins (chunk_steps, n_slots) and pads with
+    # active = 0 instead of recompiling per request shape.
+    # ------------------------------------------------------------------
+    def _chunk_impl(self, weights, carry, ext, active):
+        def body(c, xs):
+            ext_t, act_t = xs
+            new, spikes = self._step(weights, c, ext_t)
+            keep = act_t[:, None] != 0
+            c_out = {
+                "v": jnp.where(keep, new["v"], c["v"]),
+                "spikes": jnp.where(keep, new["spikes"], c["spikes"]),
+            }
+            return c_out, jnp.where(keep, spikes, 0)
+
+        return jax.lax.scan(body, carry, (ext, active))
+
+    def step_chunk(self, carry, ext, active=None):
+        """Advance a slot batch over a chunk of timesteps, with masking.
+
+        Args:
+          carry: {'v': (B, n_phys), 'spikes': (B, n_phys)} int32 slot state.
+          ext: (T, B, n_inputs) external spikes; rows of inactive slots are
+            ignored (conventionally zero).
+          active: (T, B) mask; slot b consumes step t iff active[t, b] != 0.
+            None means all slots active every step (the batch semantics).
+        Returns:
+          (carry', spikes (T, B, n_phys)): active slots advance exactly as
+          :meth:`run`'s scan body would; inactive slots keep their carry
+          unchanged and report zero spikes.
+
+        The jitted chunk step is cached on the engine; XLA reuses one
+        compiled program per (T, B) shape, so a serving layer that fixes
+        its slot-batch shape compiles exactly once.
+        """
+        ext = jnp.asarray(ext).astype(jnp.int32)
+        if ext.ndim != 3 or ext.shape[2] != self.n_inputs:
+            raise ValueError(
+                f"ext must be (T, B, {self.n_inputs}), got {ext.shape}"
+            )
+        if active is None:
+            active = jnp.ones(ext.shape[:2], jnp.int32)
+        active = jnp.asarray(active, jnp.int32)
+        if active.shape != ext.shape[:2]:
+            raise ValueError(
+                f"active mask must be {ext.shape[:2]}, got {active.shape}"
+            )
+        if self._chunk_jit is None:
+            self._chunk_jit = jax.jit(self._chunk_impl)
+        return self._chunk_jit(self.weights_raw, carry, ext, active)
 
     # ------------------------------------------------------------------
     def _run_impl(self, weights, ext_spikes):

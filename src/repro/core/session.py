@@ -59,6 +59,14 @@ class AcceleratorSession:
         # fused-engine cache: {(model names, lif signature): SpikeEngine};
         # invalidated whenever the resident set changes.
         self._fused_engines: dict = {}
+        # streaming-server cache: {(group names, sig, slots, chunk):
+        # SpikeServer} — co-resident models with a shared LIF config
+        # stream through ONE server (and one compiled step).
+        self._stream_servers: dict = {}
+        # bumped on every deploy; outstanding ModelStream views check it
+        # so a stale view fails loudly instead of streaming against a
+        # pre-deploy fused layout.
+        self._serve_epoch = 0
 
     # ------------------------------------------------------------------
     @property
@@ -99,7 +107,9 @@ class AcceleratorSession:
         self.models[name] = model
         self._next_cluster += need
         self._next_input += net.n_inputs
-        self._fused_engines.clear()  # resident set changed
+        self._fused_engines.clear()   # resident set changed
+        self._stream_servers.clear()  # fused layout changed with it
+        self._serve_epoch += 1        # invalidate outstanding stream views
         return model
 
     # ------------------------------------------------------------------
@@ -213,6 +223,63 @@ class AcceleratorSession:
                     "predictions": jnp.argmax(out_counts, axis=-1),
                 }
         return results
+
+    # ------------------------------------------------------------------
+    def serve(self, name: str, *, n_slots: int = 4, chunk_steps: int = 8):
+        """Streaming entry: a :class:`~repro.serving.snn.ModelStream` view
+        for one resident model.
+
+        All resident models sharing ``name``'s LIF configuration stream
+        through ONE fused-engine :class:`~repro.serving.snn.SpikeServer`
+        (the same union SRAM image ``run_all`` scans), so co-resident
+        models' streams share slots of one compiled step. Repeated
+        ``serve`` calls reuse the cached server — views over the same
+        group see (and compete for) the same slots, exactly like
+        co-resident workloads on the physical array.
+
+        A later :meth:`deploy` changes the fused layout and invalidates
+        outstanding views: using one afterwards raises (epoch check);
+        call ``serve`` again after deploying.
+        """
+        from repro.serving.snn import ModelStream, SpikeServer
+
+        model = self.models[name]
+        sig = self._lif_signature(model.program)
+        group = [m for m in self.models.values()
+                 if self._lif_signature(m.program) == sig]
+        group_key = (tuple(m.name for m in group), sig, self.backend)
+        key = group_key + (int(n_slots), int(chunk_steps))
+        server = self._stream_servers.get(key)
+        if server is None:
+            # one server per group: mismatched slot parameters would
+            # silently split co-resident streams into independent carries
+            for other in self._stream_servers:
+                if other[:3] == group_key:
+                    raise ValueError(
+                        f"group {group_key[0]} is already served with "
+                        f"n_slots={other[3]}, chunk_steps={other[4]}; "
+                        f"co-resident views must share one server"
+                    )
+            server = SpikeServer(self._fused_engine(group),
+                                 n_slots=n_slots, chunk_steps=chunk_steps)
+            self._stream_servers[key] = server
+        ext_offset = 0
+        for m in group:
+            if m.name == name:
+                break
+            ext_offset += m.program.n_inputs
+        npc = self.geometry.neurons_per_cluster
+        lo, hi = model.cluster_range
+        epoch = self._serve_epoch
+        return ModelStream(
+            server,
+            name=name,
+            n_inputs=model.program.n_inputs,
+            ext_offset=ext_offset,
+            phys_slice=(lo * npc, hi * npc),
+            output_map=model.program.output_map,
+            stale_check=lambda: self._serve_epoch != epoch,
+        )
 
     def utilization(self) -> dict:
         geom = self.geometry

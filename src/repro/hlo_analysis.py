@@ -27,7 +27,6 @@ cost_analysis on unrolled programs.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 import numpy as np
@@ -57,8 +56,6 @@ _INSTR_RE = re.compile(
     r"([\w\-]+)\(")                                  # opcode
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALL_ATTR_RE = re.compile(
-    r"(?:calls|condition|body|to_apply|branch_computations)=\{?%?([\w.\-{}%, ]+)")
 
 
 def _shape_dims(shape_str: str) -> list[tuple[str, tuple[int, ...]]]:
@@ -179,6 +176,12 @@ def _dot_flops(instr: Instr, shapes: dict[str, str]) -> float:
 
 def analyze_hlo(hlo_text: str) -> HLOCost:
     comps, fused = _parse(hlo_text)
+    if not comps:
+        # degenerate input (empty text, or a dialect the parser does not
+        # recognize): report zero cost instead of crashing on the entry
+        # lookup — callers treat it as "nothing to analyze"
+        return HLOCost(flops=0.0, bytes_accessed=0.0,
+                       collective_bytes={}, collective_counts={})
     # name -> result shape, for operand byte/contraction lookups (names are
     # unique module-wide in post-optimization HLO)
     shapes: dict[str, str] = {}
@@ -387,6 +390,8 @@ def memory_profile(hlo_text: str, top: int = 16) -> list[tuple]:
     NOT replicated here — this is the raw boundary view for ranking).
     """
     comps, fused = _parse(hlo_text)
+    if not comps:
+        return []
     shapes = {}
     for instrs in comps.values():
         for ins in instrs:
@@ -449,6 +454,8 @@ def collective_profile(hlo_text: str, top: int = 12) -> list[tuple]:
     Returns [(weighted_bytes, kind, shape, count, sample_op_name), ...].
     """
     comps, fused = _parse(hlo_text)
+    if not comps:
+        return []
     # multiplier per computation = product of enclosing trip counts
     mult: dict[str, float] = {}
 

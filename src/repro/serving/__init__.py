@@ -14,6 +14,10 @@ Two layers:
   * :class:`Scheduler` — groups pending requests into length buckets so
     padding waste stays bounded (the admission policy a cluster front-end
     would run).
+
+The SNN analogue — stateful spike streams over one compiled SpikeEngine
+step — lives in :mod:`repro.serving.snn` (:class:`~repro.serving.snn.
+SpikeServer` et al., re-exported here).
 """
 
 from __future__ import annotations
@@ -26,7 +30,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "Completion", "BatchServer", "Scheduler"]
+from repro.serving.snn import (  # noqa: E402  (re-export)
+    ModelStream,
+    SlotScheduler,
+    SpikeServer,
+    StreamStats,
+)
+
+__all__ = ["Request", "Completion", "BatchServer", "Scheduler",
+           "SpikeServer", "SlotScheduler", "ModelStream", "StreamStats"]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,425 @@
+"""Streaming SNN serving — stateful spike streams over one compiled step.
+
+SNAP-V's accelerator is a *stateful* device: membrane potentials persist
+across timesteps and spike events are consumed as they arrive, not as
+pre-materialized rasters. This module is the host-runtime analogue of that
+contract, built with the same fixed-slot discipline the LM ``BatchServer``
+uses (one jitted step of a pinned batch shape, reused for all traffic —
+the continuous-batching idiom):
+
+  * :class:`SlotScheduler` — admission of stream ids into a fixed set of
+    batch slots: FIFO waiting queue, FIFO slot reuse, no double
+    assignment. Pure bookkeeping; property-tested.
+  * :class:`SpikeServer` — owns the persistent slot carry
+    ``{v, spikes}`` (via ``SpikeEngine.init_carry``), chunked
+    :meth:`~SpikeServer.feed` (push N timesteps of external spikes per
+    stream, get the spike raster / counts back), carry zeroing on
+    eviction, and a closed-loop mode where the decoded output of step t
+    drives the encoder at step t+1.
+  * :class:`ModelStream` — a per-model view over a server running the
+    *fused multi-model* engine: co-resident models stream together
+    through one physical-array step, each seeing only its own input
+    columns and cluster range (``AcceleratorSession.serve``).
+
+Exactness contract (pinned by tests/test_serving_snn.py): for any chunking
+of a spike raster — including ragged chunk boundaries and co-resident
+traffic in other slots — the concatenated ``feed`` outputs are
+byte-for-byte identical to one-shot ``SpikeEngine.run`` on that raster,
+for every backend and reset mode. This falls out of the masked step: an
+active slot advances exactly as the batch scan body would; an inactive
+slot's carry is untouched.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SpikeEngine
+
+__all__ = ["SlotScheduler", "SpikeServer", "ModelStream", "StreamStats"]
+
+
+class SlotScheduler:
+    """Fixed-slot admission bookkeeping (no array state).
+
+    Invariants (property-tested in tests/test_serving_scheduler.py):
+      * an active uid occupies exactly one slot; no two share one;
+      * a freed slot is handed to the LONGEST-waiting uid (FIFO fairness);
+      * freed slots are reused in FIFO order, so slot assignment is a
+        deterministic function of the attach/detach sequence.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = int(n_slots)
+        self._slot_of: dict = {}                      # uid -> slot
+        self._free = collections.deque(range(n_slots))
+        self._waiting: collections.deque = collections.deque()
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def active(self) -> dict:
+        """{uid: slot} of admitted streams (copy)."""
+        return dict(self._slot_of)
+
+    @property
+    def waiting(self) -> list:
+        """uids queued for admission, FIFO order (copy)."""
+        return list(self._waiting)
+
+    def slot_of(self, uid) -> int | None:
+        """The uid's slot, or None while it waits."""
+        if uid in self._slot_of:
+            return self._slot_of[uid]
+        if uid in self._waiting:
+            return None
+        raise KeyError(f"unknown stream {uid!r}")
+
+    # -- transitions ------------------------------------------------------
+    def submit(self, uid) -> int | None:
+        """Admit uid into a free slot, or queue it. Returns the slot or
+        None (queued)."""
+        if uid in self._slot_of or uid in self._waiting:
+            raise ValueError(f"stream {uid!r} already submitted")
+        if self._free:
+            slot = self._free.popleft()
+            self._slot_of[uid] = slot
+            return slot
+        self._waiting.append(uid)
+        return None
+
+    def release(self, uid) -> tuple[int, object | None]:
+        """Free uid's slot; the FIFO-head waiter (if any) is admitted into
+        it. Returns (freed_slot, admitted_uid_or_None). The caller MUST
+        zero the slot's carry before the admitted stream is stepped."""
+        if uid not in self._slot_of:
+            raise KeyError(f"stream {uid!r} is not active")
+        slot = self._slot_of.pop(uid)
+        if self._waiting:
+            nxt = self._waiting.popleft()
+            self._slot_of[nxt] = slot
+            return slot, nxt
+        self._free.append(slot)
+        return slot, None
+
+    def cancel(self, uid) -> None:
+        """Withdraw a WAITING uid (never touches slots)."""
+        try:
+            self._waiting.remove(uid)
+        except ValueError:
+            raise KeyError(f"stream {uid!r} is not waiting") from None
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-stream accounting the server keeps while a stream lives."""
+
+    uid: object
+    steps: int = 0               # timesteps consumed so far
+    spike_count: int = 0         # total output spikes emitted
+    attached_at: float = 0.0     # wall clock at submit()
+    admitted_at: float | None = None  # wall clock at slot grant
+
+
+class SpikeServer:
+    """Stateful streaming server: churning spike streams, one compiled step.
+
+    The server pins the slot-batch shape ``(chunk_steps, n_slots)``: every
+    :meth:`feed` call is processed as full chunks of ``chunk_steps``
+    timesteps padded with inactive steps, so ONE XLA program (per engine)
+    serves arbitrary ragged traffic. Slot carries persist across calls;
+    :meth:`detach` zeroes the evicted slot so re-attachment starts from
+    the unified power-on state (V = 0, no prior spikes).
+    """
+
+    def __init__(self, engine: SpikeEngine, *, n_slots: int = 8,
+                 chunk_steps: int = 8):
+        if chunk_steps <= 0:
+            raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
+        self.engine = engine
+        self.n_slots = int(n_slots)
+        self.chunk_steps = int(chunk_steps)
+        self.scheduler = SlotScheduler(n_slots)
+        self.carry = engine.init_carry(self.n_slots)
+        self.streams: dict = {}      # uid -> StreamStats (active + waiting)
+        self._auto_uid = itertools.count()
+        self.total_steps = 0         # slot-timesteps consumed (all streams)
+
+    # -- lifecycle --------------------------------------------------------
+    def attach(self, uid=None):
+        """Register a stream. Returns its uid; ``slot_of(uid)`` is None
+        while it waits for a slot (FIFO admission on the next detach)."""
+        if uid is None:
+            uid = next(self._auto_uid)
+            while uid in self.streams:  # caller-chosen uids may collide
+                uid = next(self._auto_uid)
+        now = time.perf_counter()
+        slot = self.scheduler.submit(uid)
+        st = StreamStats(uid=uid, attached_at=now)
+        if slot is not None:
+            st.admitted_at = now
+        self.streams[uid] = st
+        return uid
+
+    def detach(self, uid) -> StreamStats:
+        """Evict a stream. Frees + ZEROES its slot (the next occupant must
+        power up from clean state); the longest-waiting stream, if any, is
+        admitted into the freed slot."""
+        st = self.streams.pop(uid)
+        if self.scheduler.slot_of(uid) is None:
+            self.scheduler.cancel(uid)
+            return st
+        slot, admitted = self.scheduler.release(uid)
+        self.carry = {
+            "v": self.carry["v"].at[slot].set(0),
+            "spikes": self.carry["spikes"].at[slot].set(0),
+        }
+        if admitted is not None:
+            self.streams[admitted].admitted_at = time.perf_counter()
+        return st
+
+    def slot_of(self, uid) -> int | None:
+        return self.scheduler.slot_of(uid)
+
+    # -- streaming --------------------------------------------------------
+    def feed(self, inputs: dict) -> dict:
+        """Push timesteps of external spikes for one or more streams.
+
+        Args:
+          inputs: {uid: (T_uid, n_inputs) array in {0,1}} — ragged T per
+            stream is fine; every uid must hold a slot.
+        Returns:
+          {uid: {'spikes': (T_uid, n_phys) int32 raster,
+                 'counts': (n_phys,) int32 spike counts over the chunk}}.
+
+        Slots not mentioned (or past their stream's T) are masked
+        inactive: their carries are bit-for-bit untouched. A zero-length
+        chunk is a per-stream no-op (empty raster back, carry untouched)
+        so front-ends can feed "whatever arrived this round".
+        """
+        if not inputs:
+            return {}
+        out: dict = {}
+        chunks: dict = {}
+        n_phys = self.engine.n_phys
+        for uid, arr in inputs.items():
+            slot = self.scheduler.slot_of(uid)
+            if slot is None:
+                raise ValueError(
+                    f"stream {uid!r} is waiting for a slot; cannot feed"
+                )
+            arr = np.asarray(arr)
+            if arr.ndim != 2 or arr.shape[1] != self.engine.n_inputs:
+                raise ValueError(
+                    f"stream {uid!r}: chunk must be "
+                    f"(T, {self.engine.n_inputs}), got {arr.shape}"
+                )
+            if arr.shape[0] == 0:
+                out[uid] = {"spikes": np.zeros((0, n_phys), np.int32),
+                            "counts": np.zeros((n_phys,), np.int32)}
+                continue
+            chunks[uid] = (slot, arr.astype(np.int32))
+        if not chunks:
+            return out
+
+        T_max = max(arr.shape[0] for _, arr in chunks.values())
+        n_in = self.engine.n_inputs
+        pieces: dict = {uid: [] for uid in chunks}
+        for t0 in range(0, T_max, self.chunk_steps):
+            ext = np.zeros((self.chunk_steps, self.n_slots, n_in), np.int32)
+            active = np.zeros((self.chunk_steps, self.n_slots), np.int32)
+            for uid, (slot, arr) in chunks.items():
+                n = min(self.chunk_steps, arr.shape[0] - t0)
+                if n <= 0:
+                    continue
+                ext[:n, slot] = arr[t0:t0 + n]
+                active[:n, slot] = 1
+            self.carry, spikes = self.engine.step_chunk(
+                self.carry, jnp.asarray(ext), jnp.asarray(active))
+            spikes = np.asarray(spikes)
+            self.total_steps += int(active.sum())
+            for uid, (slot, arr) in chunks.items():
+                n = min(self.chunk_steps, arr.shape[0] - t0)
+                if n > 0:
+                    pieces[uid].append(spikes[:n, slot])
+
+        for uid, (slot, arr) in chunks.items():
+            raster = np.concatenate(pieces[uid], axis=0)
+            st = self.streams[uid]
+            st.steps += raster.shape[0]
+            st.spike_count += int(raster.sum())
+            out[uid] = {"spikes": raster, "counts": raster.sum(axis=0)}
+        return out
+
+    def run_closed_loop(self, uid, controller, num_steps: int, ext0) -> dict:
+        """Closed-loop mode: output of step t feeds the encoder at t+1.
+
+        Args:
+          uid: an admitted stream.
+          controller: ``spikes_t (n_phys,) int32 -> ext_{t+1} (n_inputs,)``
+            — decode + environment + encode, the perception->action loop.
+          num_steps: timesteps to run.
+          ext0: (n_inputs,) external spikes for step 0.
+        Returns:
+          {'spikes': (num_steps, n_phys) int32, 'counts': (n_phys,)}.
+
+        Uses a T=1 slot-batch step (its own cached XLA program) so other
+        streams' slots stay untouched between iterations.
+        """
+        slot = self.scheduler.slot_of(uid)
+        if slot is None:
+            raise ValueError(f"stream {uid!r} is waiting for a slot")
+        ext_t = np.asarray(ext0, np.int32)
+        if ext_t.shape != (self.engine.n_inputs,):
+            raise ValueError(
+                f"ext0 must be ({self.engine.n_inputs},), got {ext_t.shape}"
+            )
+        n_in = self.engine.n_inputs
+        rows = []
+        active = np.zeros((1, self.n_slots), np.int32)
+        active[0, slot] = 1
+        active = jnp.asarray(active)
+        for t in range(num_steps):
+            ext = np.zeros((1, self.n_slots, n_in), np.int32)
+            ext[0, slot] = ext_t
+            self.carry, spikes = self.engine.step_chunk(
+                self.carry, jnp.asarray(ext), active)
+            self.total_steps += 1
+            spikes_t = np.asarray(spikes)[0, slot]
+            rows.append(spikes_t)
+            if t + 1 < num_steps:
+                ext_t = np.asarray(controller(spikes_t), np.int32)
+                if ext_t.shape != (n_in,):
+                    raise ValueError(
+                        f"controller must return ({n_in},) external "
+                        f"spikes, got shape {ext_t.shape} at step {t}"
+                    )
+        raster = np.stack(rows, axis=0)
+        st = self.streams[uid]
+        st.steps += num_steps
+        st.spike_count += int(raster.sum())
+        return {"spikes": raster, "counts": raster.sum(axis=0)}
+
+
+class ModelStream:
+    """Per-model streaming view over a (possibly fused multi-model) server.
+
+    ``AcceleratorSession.serve`` hands these out: all models sharing a LIF
+    configuration stream through ONE fused-engine :class:`SpikeServer`
+    (one compiled step for the whole co-resident set); each view embeds
+    its model's external spikes at the model's column offset and decodes
+    only its own cluster range — the same address-space isolation the
+    fused batch path (``run_all``) provides.
+    """
+
+    def __init__(self, server: SpikeServer, *, name: str, n_inputs: int,
+                 ext_offset: int, phys_slice: tuple[int, int],
+                 output_map: np.ndarray, stale_check=None):
+        self.server = server
+        self.name = name
+        self.n_inputs = int(n_inputs)
+        self.ext_offset = int(ext_offset)
+        self.phys_slice = (int(phys_slice[0]), int(phys_slice[1]))
+        self.output_map = np.asarray(output_map)
+        self._stale_check = stale_check
+
+    def _check_fresh(self) -> None:
+        if self._stale_check is not None and self._stale_check():
+            raise RuntimeError(
+                f"stale ModelStream view for {self.name!r}: a later deploy "
+                f"changed the fused layout; call session.serve() again"
+            )
+
+    # lifecycle passes straight through to the shared server
+    def attach(self, uid=None):
+        self._check_fresh()
+        return self.server.attach(uid)
+
+    def detach(self, uid) -> StreamStats:
+        return self.server.detach(uid)
+
+    def slot_of(self, uid):
+        return self.server.slot_of(uid)
+
+    def embed(self, chunk: np.ndarray) -> np.ndarray:
+        """Model-local (T, n_inputs) spikes -> fused-layout external rows
+        (zero everywhere but this model's input columns)."""
+        chunk = np.asarray(chunk, np.int32)
+        fused = np.zeros((chunk.shape[0], self.server.engine.n_inputs),
+                         np.int32)
+        fused[:, self.ext_offset:self.ext_offset + self.n_inputs] = chunk
+        return fused
+
+    def decode(self, raster: np.ndarray) -> dict:
+        """Fused physical raster -> this model's masked spikes + decoded
+        output counts / prediction (its cluster range only)."""
+        lo, hi = self.phys_slice
+        spikes = np.zeros_like(raster)
+        spikes[:, lo:hi] = raster[:, lo:hi]  # mask to the model's clusters
+        counts = spikes.sum(axis=0)
+        return {
+            "spikes": spikes,
+            "output_counts": counts[self.output_map],
+            "predictions": int(np.argmax(counts[self.output_map])),
+        }
+
+    def feed(self, uid, chunk) -> dict:
+        """Push (T, n_inputs) model-local external spikes; get the model's
+        masked raster + decoded output counts for the chunk back."""
+        return self.feed_many({uid: chunk})[uid]
+
+    def feed_many(self, inputs: dict) -> dict:
+        """Batched feed: {uid: (T_uid, n_inputs) chunk} for several of
+        this model's streams in ONE slot-batch dispatch (the same
+        multi-stream call :meth:`SpikeServer.feed` takes; front-ends
+        should prefer this per round over per-stream ``feed`` loops)."""
+        self._check_fresh()
+        fused: dict = {}
+        for uid, chunk in inputs.items():
+            chunk = np.asarray(chunk, np.int32)
+            if chunk.ndim != 2 or chunk.shape[1] != self.n_inputs:
+                raise ValueError(
+                    f"stream {uid!r}: chunk must be (T, {self.n_inputs}), "
+                    f"got {chunk.shape}"
+                )
+            fused[uid] = self.embed(chunk)
+        out = self.server.feed(fused)
+        return {uid: self.decode(o["spikes"]) for uid, o in out.items()}
+
+    def run_closed_loop(self, uid, controller, num_steps: int, ext0) -> dict:
+        """Closed loop at timestep granularity: ``controller`` sees the
+        model's masked spike vector and returns the next model-local
+        external spike vector."""
+        self._check_fresh()
+        lo, hi = self.phys_slice
+
+        def fused_controller(spikes_t):
+            local = np.zeros_like(spikes_t)
+            local[lo:hi] = spikes_t[lo:hi]
+            nxt = np.asarray(controller(local), np.int32)
+            if nxt.shape != (self.n_inputs,):
+                raise ValueError(
+                    f"controller must return ({self.n_inputs},) "
+                    f"model-local external spikes, got shape {nxt.shape}"
+                )
+            full = np.zeros((self.server.engine.n_inputs,), np.int32)
+            full[self.ext_offset:self.ext_offset + self.n_inputs] = nxt
+            return full
+
+        ext0 = np.asarray(ext0, np.int32)
+        if ext0.shape != (self.n_inputs,):
+            raise ValueError(
+                f"ext0 must be ({self.n_inputs},), got {ext0.shape}"
+            )
+        full0 = np.zeros((self.server.engine.n_inputs,), np.int32)
+        full0[self.ext_offset:self.ext_offset + self.n_inputs] = ext0
+        out = self.server.run_closed_loop(uid, fused_controller, num_steps,
+                                          full0)
+        return self.decode(out["spikes"])

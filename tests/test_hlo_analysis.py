@@ -8,14 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.hlo_analysis import analyze_hlo
+from repro.hlo_analysis import analyze_hlo, collective_profile, memory_profile
 
 L, B, D = 6, 4, 64
 
 
 def _cost(compiled) -> dict:
     """jax's Compiled.cost_analysis() returns a dict on some versions and
-    a single-element list of dicts on others — normalize."""
+    a single-element list of dicts on others (the seed's latent TypeError
+    when indexed unconditionally) — normalize."""
     ca = compiled.cost_analysis()
     return ca[0] if isinstance(ca, list) else ca
 
@@ -99,6 +100,29 @@ def test_collectives_multiplied_by_trip_count():
     if got.collective_counts:  # single-device builds may elide the psum
         assert got.collective_counts.get("all-reduce", 0) == L
         assert got.collective_bytes["all-reduce"] == L * B * D * 4
+
+
+def test_cost_analysis_normalizer_yields_mapping(compiled_pair):
+    """Whatever container this jax version returns, the normalized view is
+    a mapping with the keys the suite reads — the version-compat contract
+    the (fixed) seed debt was about."""
+    cs, cu = compiled_pair
+    for c in (cs, cu):
+        d = _cost(c)
+        assert isinstance(d, dict)
+        assert "flops" in d and "bytes accessed" in d
+
+
+def test_parser_tolerates_degenerate_text():
+    """Empty / unrecognized HLO text reports zero cost instead of crashing
+    — the analyzer's own latent parser debt, pinned."""
+    for text in ("", "HloModule empty\n", "garbage {{{ not hlo"):
+        got = analyze_hlo(text)
+        assert got.flops == 0.0
+        assert got.bytes_accessed == 0.0
+        assert got.collective_counts == {}
+    assert memory_profile("") == []
+    assert collective_profile("") == []
 
 
 def test_nested_loops_multiply():

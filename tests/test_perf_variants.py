@@ -128,11 +128,25 @@ np.testing.assert_allclose(np.asarray(e_out), np.asarray(d_out),
                            rtol=2e-4, atol=2e-5)
 print("OK")
 """
-    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"),
+    # deterministic subprocess environment: drop any inherited JAX/XLA
+    # configuration (an ambient XLA_FLAGS or JAX_PLATFORMS would fight the
+    # 8-fake-device setup — the historical flake), then pin CPU + devices.
+    env = {k: v for k, v in os.environ.items()
+           if not k.startswith(("JAX_", "XLA_"))}
+    env.update(PYTHONPATH=os.path.join(repo, "src"),
+               JAX_PLATFORMS="cpu",
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=600)
-    assert proc.returncode == 0 and "OK" in proc.stdout, proc.stderr[-2000:]
+    for attempt in range(2):
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, timeout=600)
+        if proc.returncode == 0:
+            break
+        if proc.returncode > 0:
+            break  # a real Python failure: do not mask it by retrying
+        # negative returncode = killed by a signal (OOM/SIGKILL under CI
+        # memory pressure): transient, retry once
+    assert proc.returncode == 0 and "OK" in proc.stdout, (
+        f"rc={proc.returncode}\n{proc.stderr[-2000:]}")
 
 
 def test_moe_ep_falls_back_without_mesh(rng):
