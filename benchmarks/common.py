@@ -1,7 +1,9 @@
-"""Shared benchmark plumbing: timing helper + CSV emission."""
+"""Shared benchmark plumbing: timing helper + CSV / JSON emission."""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import jax
@@ -20,6 +22,53 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float | None, derived: str) -> None:
+# Machine-readable result collection: benchmarks call start_recording()
+# once, then every emit() with structured **fields is also appended to an
+# in-memory record list that write_json() dumps as a BENCH_*.json — the
+# repo's perf trajectory across PRs.
+_records: list[dict] | None = None
+
+
+def start_recording() -> None:
+    global _records
+    _records = []
+
+
+def write_json(path: str, **metadata) -> None:
+    if _records is None:
+        raise RuntimeError("write_json() without start_recording()")
+    doc = {
+        "metadata": {
+            "backend_platform": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "jax_version": jax.__version__,
+            "python_version": platform.python_version(),
+            "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            **metadata,
+        },
+        "results": _records,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] wrote {len(_records)} records -> {path}", flush=True)
+
+
+def emit(name: str, us_per_call: float | None, derived: str,
+         **fields) -> None:
+    """Print one CSV line; when recording, also append a JSON record.
+
+    ``fields`` carries the structured axes (backend, batch, occupancy,
+    devices, ...); ``us_per_call`` additionally derives ``steps_per_s``
+    when the metric is a per-timestep latency.
+    """
     us = "" if us_per_call is None else f"{us_per_call:.1f}"
     print(f"{name},{us},{derived}", flush=True)
+    if _records is not None:
+        per_timestep = fields.pop("per_timestep", False)  # directive, not data
+        rec = {"name": name, "info": derived, **fields}
+        if us_per_call is not None:
+            rec["us_per_call"] = round(us_per_call, 3)
+            if per_timestep:
+                rec["steps_per_s"] = round(1e6 / us_per_call, 3)
+        _records.append(rec)

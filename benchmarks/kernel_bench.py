@@ -7,25 +7,40 @@ weight blocks; timings are still printed for regression tracking).
 backend, so the Pallas-vs-reference speedup is measurable on real
 inference timesteps (one engine, carries included) rather than only on
 the isolated kernel call.
+
+``--devices N`` (optionally with ``--mesh KNxKB``) adds the scale-out
+axis: every engine-scan and streaming bench also runs on a mesh-sharded
+``MeshSpikeEngine`` (N faked host devices on CPU; real devices on TPU),
+so the per-timestep cost of the neuron-shard spike exchange is tracked
+next to the single-device numbers. ``--json out.json`` writes all results
+as machine-readable records per (backend, batch, occupancy, devices) —
+the repo's ``BENCH_*.json`` perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_call
 from repro.core.engine import BACKENDS, DecaySpec, SpikeEngine
-from repro.kernels import ops, ref
+from repro.distributed.spike_mesh import (ensure_host_devices,
+                                          make_spike_mesh, parse_mesh_spec)
 from repro.serving.snn import SpikeServer
+
+# NOTE: repro.kernels.ops/ref import the Pallas TPU machinery, which
+# INITIALIZES the XLA backend at import time — that would lock in the
+# device count before --devices can force faked host devices. They are
+# imported inside main(), after ensure_host_devices().
 
 
 def bench_engine_backends(backends, *, batch: int, activity: float,
-                          steps: int = 4) -> None:
+                          steps: int = 4, mesh=None) -> None:
     """Per-backend engine-scan throughput at the 1024-neuron scale."""
+    devices = 1 if mesh is None else mesh.size
     rng = np.random.default_rng(0)
     n_in, P = 784, 1024
     W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
@@ -35,18 +50,24 @@ def bench_engine_backends(backends, *, batch: int, activity: float,
         engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
                              threshold_raw=1 << 16, reset_mode="zero",
                              backend=backend)
+        if mesh is not None:
+            engine = engine.to_mesh(mesh)
         t_run = time_call(lambda e=engine: e.run(ext)["spikes"])
         per_step = t_run / steps
-        emit(f"engine/timestep_{backend}", per_step,
+        emit(f"engine/timestep_{backend}_d{devices}", per_step,
              f"us/timestep B={batch} S={n_in + P} P={P} "
-             f"activity={activity} T={steps}")
+             f"activity={activity} T={steps} devices={devices}",
+             kind="engine_scan", backend=backend, batch=batch,
+             activity=activity, devices=devices, per_timestep=True)
 
 
 def bench_streaming(backends, *, n_slots: int, activity: float,
-                    chunk_steps: int = 8, rounds: int = 3) -> None:
+                    chunk_steps: int = 8, rounds: int = 3,
+                    mesh=None) -> None:
     """The serving axis: masked slot-batch chunk step (SpikeServer.feed)
     vs the one-shot batch scan on the same raster, plus the cost of a
     partially occupied slot batch (the serving occupancy regime)."""
+    devices = 1 if mesh is None else mesh.size
     rng = np.random.default_rng(0)
     n_in, P = 784, 1024
     W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
@@ -60,9 +81,14 @@ def bench_streaming(backends, *, n_slots: int, activity: float,
         engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
                              threshold_raw=1 << 16, reset_mode="zero",
                              backend=backend)
+        if mesh is not None:
+            engine = engine.to_mesh(mesh)
         t_batch = time_call(lambda e=engine: e.run(batch)["spikes"])
-        emit(f"streaming/batch_scan_{backend}", t_batch / T,
-             f"us/timestep B={n_slots} T={T} (one-shot run)")
+        emit(f"streaming/batch_scan_{backend}_d{devices}", t_batch / T,
+             f"us/timestep B={n_slots} T={T} devices={devices} "
+             f"(one-shot run)",
+             kind="streaming_batch_scan", backend=backend, batch=n_slots,
+             activity=activity, devices=devices, per_timestep=True)
 
         for occupancy in (1.0, 0.25):
             n_live = max(1, int(round(occupancy * n_slots)))
@@ -77,9 +103,14 @@ def bench_streaming(backends, *, n_slots: int, activity: float,
                 return srv.total_steps
 
             t_srv = time_call(serve)
-            emit(f"streaming/feed_{backend}_occ{occupancy:g}", t_srv / T,
+            emit(f"streaming/feed_{backend}_occ{occupancy:g}_d{devices}",
+                 t_srv / T,
                  f"us/timestep {n_live}/{n_slots} slots live, "
-                 f"chunk={chunk_steps} (masked step, per-chunk host hop)")
+                 f"chunk={chunk_steps} devices={devices} "
+                 f"(masked step, per-chunk host hop)",
+                 kind="streaming_feed", backend=backend, batch=n_slots,
+                 occupancy=occupancy, activity=activity, devices=devices,
+                 per_timestep=True)
 
 
 def main(argv=None) -> None:
@@ -93,14 +124,50 @@ def main(argv=None) -> None:
     ap.add_argument("--streaming", action="store_true",
                     help="also benchmark the SpikeServer slot-batch path "
                          "(masked chunk step vs one-shot batch scan)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="also run the engine/streaming benches on a mesh "
+                         "over N devices (faked host devices on CPU)")
+    ap.add_argument("--mesh", default=None, metavar="KNxKB",
+                    help="neuron x batch mesh split for --devices "
+                         "(default: 2 x N/2 when N allows)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_*.json)")
     args = ap.parse_args(argv)
+    if args.mesh and args.devices <= 1:
+        raise SystemExit("--mesh requires --devices N (N > 1); without it "
+                         "the sharded benches would silently not run")
+
+    # force the faked device count BEFORE the first jax backend touch
+    # (the Pallas kernel import below initializes it)
+    if args.devices > 1:
+        ensure_host_devices(args.devices)
+    from repro.kernels import ops, ref
+
     backends = list(BACKENDS) if args.backend == "all" else [args.backend]
+    if args.json:
+        common.start_recording()
+
+    mesh = None
+    if args.devices > 1:
+        try:
+            kn, kb = parse_mesh_spec(args.devices, args.mesh)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        mesh = make_spike_mesh(neuron=kn, batch=kb)
+        print(f"[bench] mesh axis: {kn} neuron shards x {kb} batch shards "
+              f"({args.devices} devices)", flush=True)
 
     bench_engine_backends(backends, batch=args.batch,
                           activity=args.activity)
+    if mesh is not None:
+        bench_engine_backends(backends, batch=args.batch,
+                              activity=args.activity, mesh=mesh)
     if args.streaming:
         bench_streaming(backends, n_slots=args.batch,
                         activity=args.activity)
+        if mesh is not None:
+            bench_streaming(backends, n_slots=args.batch,
+                            activity=args.activity, mesh=mesh)
 
     rng = np.random.default_rng(0)
     B, S, P = args.batch, 784 + 1024, 1024
@@ -117,8 +184,10 @@ def main(argv=None) -> None:
     t_fused = time_call(lambda: fused())
     t_ref = time_call(lambda: unfused())
     emit("kernel/spike_timestep_fused", t_fused,
-         f"B={B} S={S} P={P} activity={args.activity}")
-    emit("kernel/spike_timestep_ref", t_ref, "pure-jnp oracle")
+         f"B={B} S={S} P={P} activity={args.activity}",
+         kind="kernel", batch=B, activity=args.activity, devices=1)
+    emit("kernel/spike_timestep_ref", t_ref, "pure-jnp oracle",
+         kind="kernel", batch=B, activity=args.activity, devices=1)
 
     # event-gating accounting: active source blocks out of total
     blk = 128
@@ -130,7 +199,8 @@ def main(argv=None) -> None:
         (padded.reshape(B, nblk, blk).sum(axis=(0, 2)) > 0).sum())
     emit("kernel/active_source_blocks", None,
          f"{active_blocks}/{nblk} touched -> "
-         f"{100 * (1 - active_blocks / nblk):.0f}% weight traffic skipped")
+         f"{100 * (1 - active_blocks / nblk):.0f}% weight traffic skipped",
+         kind="accounting", active_blocks=active_blocks, total_blocks=nblk)
 
     # LIF + encoder micro-latencies
     vv = jnp.asarray(rng.integers(-2**20, 2**20, (B, P)), jnp.int32)
@@ -138,10 +208,25 @@ def main(argv=None) -> None:
     t_lif = time_call(
         lambda: ops.lif_step(vv, syn, decay_rate=0.25,
                              threshold_raw=1 << 16))
-    emit("kernel/lif_step", t_lif, f"B={B} N={P}")
+    emit("kernel/lif_step", t_lif, f"B={B} N={P}",
+         kind="kernel", batch=B, devices=1)
     x = jnp.asarray(rng.random((B, 784)), jnp.float32)
     t_enc = time_call(lambda: ops.poisson_encode(0, x, 25))
-    emit("kernel/poisson_encode", t_enc, f"B={B} D=784 T=25")
+    emit("kernel/poisson_encode", t_enc, f"B={B} D=784 T=25",
+         kind="kernel", batch=B, devices=1)
+
+    if args.json:
+        common.write_json(
+            args.json,
+            bench="kernel_bench",
+            # devices=1 records in a --devices N run still execute on the
+            # N-way faked host topology; flag it so trajectory comparisons
+            # against plain single-device runs don't conflate the two.
+            host_devices_forced=args.devices if args.devices > 1 else None,
+            args={"batch": args.batch, "activity": args.activity,
+                  "backend": args.backend, "streaming": args.streaming,
+                  "devices": args.devices, "mesh": args.mesh},
+        )
 
 
 if __name__ == "__main__":

@@ -195,6 +195,24 @@ class SpikeEngine:
         self._chunk_jit = None  # compiled masked chunk step (streaming path)
 
     # ------------------------------------------------------------------
+    def _scan_weights(self):
+        """The weight image :meth:`run`/:meth:`step_chunk` dispatch with.
+
+        Subclasses may substitute an equivalent re-hosted image (the mesh
+        engine hands back its padded, device-sharded SRAM slices); the
+        logical program — and therefore the numbers — must not change.
+        """
+        return self.weights_raw
+
+    def to_mesh(self, mesh):
+        """Drop-in scale-out: this engine's program re-hosted on a device
+        mesh (:class:`repro.distributed.spike_mesh.MeshSpikeEngine`), with
+        bit-identical ``run``/``step_chunk`` semantics."""
+        from repro.distributed.spike_mesh import MeshSpikeEngine
+
+        return MeshSpikeEngine.from_engine(self, mesh)
+
+    # ------------------------------------------------------------------
     def init_carry(self, batch: int) -> dict:
         """The unified initial accelerator state: V = 0, no prior spikes.
 
@@ -254,10 +272,16 @@ class SpikeEngine:
     # the serving layer pins (chunk_steps, n_slots) and pads with
     # active = 0 instead of recompiling per request shape.
     # ------------------------------------------------------------------
-    def _chunk_impl(self, weights, carry, ext, active):
+    def _masked_chunk_scan(self, step_fn, carry, ext, active):
+        """THE masked-slot scan: advance via ``step_fn`` where active,
+        keep the carry bit-for-bit (and report zero spikes) where not.
+        Single definition — the mesh engine scans the same body with its
+        spike-exchange step, so the paused-stream contract cannot drift
+        between the single-device and sharded paths."""
+
         def body(c, xs):
             ext_t, act_t = xs
-            new, spikes = self._step(weights, c, ext_t)
+            new, spikes = step_fn(c, ext_t)
             keep = act_t[:, None] != 0
             c_out = {
                 "v": jnp.where(keep, new["v"], c["v"]),
@@ -266,6 +290,10 @@ class SpikeEngine:
             return c_out, jnp.where(keep, spikes, 0)
 
         return jax.lax.scan(body, carry, (ext, active))
+
+    def _chunk_impl(self, weights, carry, ext, active):
+        step = lambda c, x: self._step(weights, c, x)
+        return self._masked_chunk_scan(step, carry, ext, active)
 
     def step_chunk(self, carry, ext, active=None):
         """Advance a slot batch over a chunk of timesteps, with masking.
@@ -299,7 +327,7 @@ class SpikeEngine:
             )
         if self._chunk_jit is None:
             self._chunk_jit = jax.jit(self._chunk_impl)
-        return self._chunk_jit(self.weights_raw, carry, ext, active)
+        return self._chunk_jit(self._scan_weights(), carry, ext, active)
 
     # ------------------------------------------------------------------
     def _run_impl(self, weights, ext_spikes):
@@ -325,4 +353,4 @@ class SpikeEngine:
             )
         if self._run_jit is None:
             self._run_jit = jax.jit(self._run_impl)
-        return self._run_jit(self.weights_raw, ext_spikes)
+        return self._run_jit(self._scan_weights(), ext_spikes)

@@ -46,13 +46,20 @@ class AcceleratorSession:
     """Host-side runtime for one Cerebra-H accelerator instance.
 
     ``backend`` selects the SpikeEngine backend for every inference run on
-    this session ("reference" | "pallas" | "pallas-mxu").
+    this session ("reference" | "pallas" | "pallas-mxu"). ``mesh`` (a
+    ``jax.sharding.Mesh`` with ``neuron``/``batch`` axes, see
+    ``repro.distributed.spike_mesh.make_spike_mesh``) scales the fused
+    paths out over devices: ``run_all`` and the streaming servers behind
+    :meth:`serve` step a mesh-sharded engine — neuron shards close to
+    their SRAM slice, spike exchange per timestep — with outputs
+    bit-identical to the single-device session.
     """
 
     def __init__(self, config: cerebra_h.CerebraHConfig | None = None,
-                 backend: str = "reference"):
+                 backend: str = "reference", mesh=None):
         self.config = config or cerebra_h.CerebraHConfig()
         self.backend = backend
+        self.mesh = mesh
         self.models: dict[str, DeployedModel] = {}
         self._next_cluster = 0
         self._next_input = 0
@@ -142,7 +149,7 @@ class AcceleratorSession:
         IS the union SRAM image the hardware holds.
         """
         sig = self._lif_signature(members[0].program)
-        key = (tuple(m.name for m in members), sig, self.backend)
+        key = (tuple(m.name for m in members), sig, self.backend, self.mesh)
         engine = self._fused_engines.get(key)
         if engine is not None:
             return engine
@@ -166,6 +173,8 @@ class AcceleratorSession:
             reset_mode=reset_mode,
             backend=self.backend,
         )
+        if self.mesh is not None:
+            engine = engine.to_mesh(self.mesh)
         self._fused_engines[key] = engine
         return engine
 

@@ -1,3 +1,4 @@
-"""Distribution: partition rules, straggler mitigation, elastic helpers."""
+"""Distribution: partition rules, mesh-sharded spike engine, straggler
+mitigation, elastic helpers."""
 
-from repro.distributed import partition, straggler  # noqa: F401
+from repro.distributed import partition, spike_mesh, straggler  # noqa: F401

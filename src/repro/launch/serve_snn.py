@@ -8,6 +8,15 @@ their Poisson-encoded stimulus in fixed-size chunks through ONE compiled
 slot-batch step, and detach. Reports aggregate steps/s and per-stream
 latency percentiles — the "many concurrent stateful streams over one
 engine" shape of the heavy-traffic north star.
+
+``--devices N`` (with optional ``--mesh KNxKB``) runs the whole fused
+server mesh-sharded (``AcceleratorSession(mesh=...)``): neuron shards
+hold their SRAM slice and the slot batch shards over the ``batch`` axis —
+byte-identical outputs, scale-out throughput. A
+:class:`~repro.distributed.straggler.StragglerDetector` watches per-chunk
+step times attributed to batch shards by their live-slot load (FIFO slot
+reuse can concentrate live streams on one shard); flagged shards get a
+``rebalance_shards`` slot-redistribution suggestion in the summary.
 """
 
 from __future__ import annotations
@@ -23,6 +32,9 @@ from repro.core.engine import BACKENDS
 from repro.core.lif import LIFParams
 from repro.core.network import SNNetwork
 from repro.core.session import AcceleratorSession
+from repro.distributed.spike_mesh import (ensure_host_devices,
+                                          make_spike_mesh, parse_mesh_spec)
+from repro.distributed.straggler import StragglerDetector, rebalance_shards
 
 
 def make_net(rng, n_in: int, n_neurons: int, *, density: float = 0.25,
@@ -35,6 +47,87 @@ def make_net(rng, n_in: int, n_neurons: int, *, density: float = 0.25,
         weights=W.astype(np.float32),
         params=LIFParams(decay_rate=0.25, threshold=1.0, reset_mode="zero"),
         output_slice=(n_neurons - out, n_neurons))
+
+
+class ShardLoadWatch:
+    """Straggler watch over the serving loop's synchronous dispatches.
+
+    A single-controller SPMD step yields ONE host-observed wall time per
+    chunk; true per-shard times need multi-controller timing. What IS
+    observable per batch shard is its live-slot load, so each dispatch's
+    time is attributed to shards proportionally to the live slots they
+    own (slots map to batch shards contiguously, `slot // slots_per
+    _shard`). A shard that persistently carries more live streams than
+    the fleet — which FIFO slot reuse can produce — accumulates strikes
+    and earns a ``rebalance_shards`` suggestion.
+    """
+
+    # a shard earns a rebalance suggestion only when flagged in at least
+    # this fraction of dispatches (and at least twice): a transient
+    # 3-chunk imbalance at admission time should not brand the whole run.
+    PERSISTENT_FRACTION = 0.1
+
+    def __init__(self, n_shards: int, n_slots: int):
+        self.n_shards = int(n_shards)
+        self.n_slots = int(n_slots)
+        padded = -(-n_slots // n_shards) * n_shards
+        self.slots_per_shard = padded // n_shards
+        self.detector = StragglerDetector(num_hosts=n_shards,
+                                          warmup_steps=3, patience=3)
+        self.flag_counts = np.zeros(n_shards, np.int64)
+        self.chunk_times: list[float] = []
+
+    def observe(self, dt: float, live_slots) -> None:
+        self.chunk_times.append(dt)
+        load = np.zeros(self.n_shards)
+        for slot in live_slots:
+            load[slot // self.slots_per_shard] += 1
+        mean = load.mean()
+        attributed = dt * load / mean if mean > 0 else np.full(
+            self.n_shards, dt)
+        self.flag_counts += self.detector.observe(attributed)
+
+    def summary(self) -> list[str]:
+        if not self.chunk_times:
+            return []
+        ct = np.asarray(self.chunk_times) * 1e3
+        if self.n_shards <= 1:
+            # unsharded run: no shards to attribute or rebalance — report
+            # the dispatch-time distribution only
+            return [
+                f"[serve-snn] {len(ct)} chunk dispatches: "
+                f"p50 {np.percentile(ct, 50):.1f} ms, "
+                f"p95 {np.percentile(ct, 95):.1f} ms"
+            ]
+        stats = self.detector.stats
+        lines = [
+            f"[serve-snn] straggler watch over {len(ct)} chunk dispatches "
+            f"x {self.n_shards} batch shards: load-attributed step time "
+            f"mean {float(stats['mean'].mean()):.4f}s "
+            f"(dispatch p50 {np.percentile(ct, 50):.1f} ms, "
+            f"p95 {np.percentile(ct, 95):.1f} ms), per-shard flag counts "
+            f"{self.flag_counts.tolist()}"
+        ]
+        persistent = self.flag_counts >= max(
+            2, int(self.PERSISTENT_FRACTION * len(ct)))
+        if persistent.any() and not persistent.all():
+            sizes = rebalance_shards(self.n_slots, persistent)
+            lines.append(
+                f"[serve-snn] persistently overloaded shard(s) "
+                f"{np.where(persistent)[0].tolist()} -> suggested slot "
+                f"rebalance {sizes.tolist()} (of {self.n_slots} slots)")
+        elif persistent.all():
+            lines.append(
+                "[serve-snn] all shards flagged together (fleet-wide "
+                "step-time stretch, not a per-shard straggler); slot "
+                "split unchanged "
+                f"{rebalance_shards(self.n_slots, persistent).tolist()}")
+        else:
+            lines.append(
+                "[serve-snn] no persistently overloaded shards; slot "
+                "split stays uniform "
+                f"{rebalance_shards(self.n_slots, persistent).tolist()}")
+        return lines
 
 
 def main(argv=None) -> None:
@@ -52,6 +145,12 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", choices=list(BACKENDS), default="reference")
     ap.add_argument("--models", type=int, default=2,
                     help="co-resident models sharing the fused engine")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the fused server over N devices "
+                         "(faked host devices on CPU)")
+    ap.add_argument("--mesh", default=None, metavar="KNxKB",
+                    help="neuron x batch mesh split for --devices "
+                         "(default: 2 x N/2 when N allows)")
     ap.add_argument("--n-inputs", type=int, default=24)
     ap.add_argument("--n-neurons", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
@@ -60,9 +159,22 @@ def main(argv=None) -> None:
         raise SystemExit("--arrival-rate must be > 0 (expected arrivals "
                          "per round; the arrival plan cannot make progress "
                          "at rate 0)")
+    if args.mesh and args.devices <= 1:
+        raise SystemExit("--mesh requires --devices N (N > 1); without it "
+                         "the server would silently run unsharded")
+
+    mesh = None
+    if args.devices > 1:
+        # before the first jax device use, so faked CPU devices can land
+        ensure_host_devices(args.devices)
+        try:
+            kn, kb = parse_mesh_spec(args.devices, args.mesh)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        mesh = make_spike_mesh(neuron=kn, batch=kb)
 
     rng = np.random.default_rng(args.seed)
-    sess = AcceleratorSession(backend=args.backend)
+    sess = AcceleratorSession(backend=args.backend, mesh=mesh)
     names = [f"snn{i}" for i in range(args.models)]
     for name in names:
         sess.deploy(name, make_net(rng, args.n_inputs, args.n_neurons))
@@ -72,10 +184,16 @@ def main(argv=None) -> None:
     server = next(iter(views.values())).server
     assert all(v.server is server for v in views.values()), \
         "co-resident models must share one fused-engine server"
+    n_shards = 1 if mesh is None else int(mesh.shape["batch"])
+    mesh_note = "" if mesh is None else (
+        f", mesh {mesh.shape['neuron']}x{mesh.shape['batch']} "
+        f"(neuron x batch) over {mesh.size} devices")
     print(f"[serve-snn] {args.models} co-resident model(s) on one fused "
           f"engine ({server.engine.n_sources} sources x "
           f"{server.engine.n_phys} neurons), backend={args.backend}, "
-          f"{args.n_slots} slots x {args.chunk}-step chunks")
+          f"{args.n_slots} slots x {args.chunk}-step chunks{mesh_note}")
+
+    watch = ShardLoadWatch(n_shards, args.n_slots)
 
     # synthetic request plan: stream i -> (model, Poisson-encoded stimulus)
     key = jax.random.key(args.seed)
@@ -112,16 +230,21 @@ def main(argv=None) -> None:
         # across models — embeds into the fused layout and steps together
         done = []
         fused_inputs = {}
+        live_slots = []
         for uid, (name, spikes, cur) in live.items():
-            if server.slot_of(uid) is None:
+            slot = server.slot_of(uid)
+            if slot is None:
                 continue  # still waiting for a slot
+            live_slots.append(slot)
             n = min(args.chunk, len(spikes) - cur)
             fused_inputs[uid] = views[name].embed(spikes[cur:cur + n])
             live[uid][2] = cur + n
             if cur + n >= len(spikes):
                 done.append(uid)
         if fused_inputs:
+            t_chunk0 = time.perf_counter()
             server.feed(fused_inputs)
+            watch.observe(time.perf_counter() - t_chunk0, live_slots)
         for uid in done:
             name = live.pop(uid)[0]
             views[name].detach(uid)
@@ -137,6 +260,8 @@ def main(argv=None) -> None:
           f"p50 {np.percentile(lats, 50) * 1e3:.1f} ms, "
           f"p95 {np.percentile(lats, 95) * 1e3:.1f} ms "
           f"(queueing under {args.n_slots} slots)")
+    for line in watch.summary():
+        print(line)
 
 
 if __name__ == "__main__":

@@ -137,12 +137,20 @@ class SpikeServer:
     serves arbitrary ragged traffic. Slot carries persist across calls;
     :meth:`detach` zeroes the evicted slot so re-attachment starts from
     the unified power-on state (V = 0, no prior spikes).
+
+    ``mesh`` scales the server out over devices: the engine is re-hosted
+    as a :class:`~repro.distributed.spike_mesh.MeshSpikeEngine` (neuron
+    shards hold their SRAM slice, slot batch sharded over the ``batch``
+    axis) with byte-identical ``feed`` semantics — streaming slot-batches
+    run sharded with no change to any caller.
     """
 
     def __init__(self, engine: SpikeEngine, *, n_slots: int = 8,
-                 chunk_steps: int = 8):
+                 chunk_steps: int = 8, mesh=None):
         if chunk_steps <= 0:
             raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
+        if mesh is not None and getattr(engine, "mesh", None) is not mesh:
+            engine = engine.to_mesh(mesh)
         self.engine = engine
         self.n_slots = int(n_slots)
         self.chunk_steps = int(chunk_steps)
