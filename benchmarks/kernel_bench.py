@@ -12,9 +12,16 @@ the isolated kernel call.
 axis: every engine-scan and streaming bench also runs on a mesh-sharded
 ``MeshSpikeEngine`` (N faked host devices on CPU; real devices on TPU),
 so the per-timestep cost of the neuron-shard spike exchange is tracked
-next to the single-device numbers. ``--json out.json`` writes all results
-as machine-readable records per (backend, batch, occupancy, devices) —
-the repo's ``BENCH_*.json`` perf trajectory.
+next to the single-device numbers.
+
+``--sparsity S1,S2,...`` adds the event-gating axis: gated-vs-dense
+weight-block traffic and SOP reduction (measured from real rasters via
+``events.trace``) per gate granularity (batch-tile vs per-example, the
+batch-tile=1 serving mode) x backend x serving occupancy.
+
+``--json out.json`` writes all results as machine-readable records per
+(backend, batch, occupancy, sparsity, gate, devices) — the repo's
+``BENCH_*.json`` perf trajectory.
 """
 
 from __future__ import annotations
@@ -26,9 +33,10 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit, time_call
-from repro.core.engine import BACKENDS, DecaySpec, SpikeEngine
+from repro.core.engine import BACKENDS, GATES, DecaySpec, SpikeEngine
 from repro.distributed.spike_mesh import (ensure_host_devices,
                                           make_spike_mesh, parse_mesh_spec)
+from repro.events import trace
 from repro.serving.snn import SpikeServer
 
 # NOTE: repro.kernels.ops/ref import the Pallas TPU machinery, which
@@ -113,6 +121,79 @@ def bench_streaming(backends, *, n_slots: int, activity: float,
                  per_timestep=True)
 
 
+def bench_event_gating(backends, sparsities, *, batch: int,
+                       n_slots: int = 8, steps: int = 4) -> None:
+    """The sparsity axis: event-gated vs dense work, from real rasters.
+
+    For each source-activity level this records (a) the gated-vs-dense
+    weight-block traffic and SOP reduction under both gate granularities
+    (accounting via ``events.trace`` — the structural claim), (b) the
+    engine-scan time per backend x gate, and (c) the serving occupancy
+    regime: a slot batch with idle slots, where the batch-tile=1
+    (per-example) gate skips the idle slots' weight traffic entirely
+    while the batch-tile OR cannot.
+    """
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    ref = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                      threshold_raw=1 << 16, reset_mode="zero")
+    for sparsity in sparsities:
+        ext = jnp.asarray(
+            rng.random((steps, batch, n_in)) < sparsity, jnp.int32)
+        rep = trace.trace_run(ref, ext, ref.run(ext)["spikes"])
+        for gate in GATES:
+            touched, total = rep.blocks[gate]
+            emit(f"gating/traffic_{gate}_s{sparsity:g}", None,
+                 f"{touched}/{total} weight blocks "
+                 f"({100 * rep.traffic_ratio(gate):.1f}% of dense), "
+                 f"SOPs {100 * rep.sop_ratio:.1f}% of dense, B={batch}",
+                 kind="event_gating", gate=gate, sparsity=sparsity,
+                 batch=batch, blocks_touched=touched, blocks_total=total,
+                 traffic_ratio=round(rep.traffic_ratio(gate), 4),
+                 measured_sops=rep.measured_sops,
+                 dense_sops=rep.dense_sops,
+                 sop_ratio=round(rep.sop_ratio, 4))
+        for backend in backends:
+            # the gate is a kernel concept: the reference matmul ignores
+            # it, so timing reference x per-example would record pure jit
+            # noise as a gate effect — one row there.
+            for gate in (GATES if backend != "reference"
+                         else ("batch-tile",)):
+                engine = SpikeEngine(
+                    W, n_in, decay=DecaySpec.shift(0.25),
+                    threshold_raw=1 << 16, reset_mode="zero",
+                    backend=backend, gate=gate)
+                t = time_call(lambda e=engine: e.run(ext)["spikes"])
+                emit(f"gating/timestep_{backend}_{gate}_s{sparsity:g}",
+                     t / steps,
+                     f"us/timestep B={batch} sparsity={sparsity} "
+                     f"gate={gate}",
+                     kind="event_gating_time", backend=backend, gate=gate,
+                     sparsity=sparsity, batch=batch, per_timestep=True)
+        # serving occupancy: only a fraction of slots carry a live stream
+        # (idle slots are silent end-to-end — no input, no spikes)
+        for occupancy in (1.0, 0.25, 0.125):
+            n_live = max(1, int(round(occupancy * n_slots)))
+            slot_ext = np.zeros((steps, n_slots, n_in), np.int32)
+            slot_ext[:, :n_live] = np.asarray(
+                rng.random((steps, n_live, n_in)) < sparsity, np.int32)
+            srep = trace.trace_run(
+                ref, slot_ext, ref.run(jnp.asarray(slot_ext))["spikes"])
+            for gate in GATES:
+                touched, total = srep.blocks[gate]
+                emit(f"gating/serving_{gate}_occ{occupancy:g}"
+                     f"_s{sparsity:g}", None,
+                     f"{n_live}/{n_slots} slots live: {touched}/{total} "
+                     f"weight blocks "
+                     f"({100 * srep.traffic_ratio(gate):.1f}% of dense)",
+                     kind="event_gating_serving", gate=gate,
+                     occupancy=occupancy, sparsity=sparsity,
+                     n_slots=n_slots, blocks_touched=touched,
+                     blocks_total=total,
+                     traffic_ratio=round(srep.traffic_ratio(gate), 4))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -124,6 +205,11 @@ def main(argv=None) -> None:
     ap.add_argument("--streaming", action="store_true",
                     help="also benchmark the SpikeServer slot-batch path "
                          "(masked chunk step vs one-shot batch scan)")
+    ap.add_argument("--sparsity", default=None, metavar="S1,S2,...",
+                    help="comma list of source-activity levels for the "
+                         "event-gating sweep: gated-vs-dense weight "
+                         "traffic / SOP reduction per gate x backend x "
+                         "serving occupancy (e.g. 0.02,0.05,0.2)")
     ap.add_argument("--devices", type=int, default=1,
                     help="also run the engine/streaming benches on a mesh "
                          "over N devices (faked host devices on CPU)")
@@ -156,6 +242,16 @@ def main(argv=None) -> None:
         mesh = make_spike_mesh(neuron=kn, batch=kb)
         print(f"[bench] mesh axis: {kn} neuron shards x {kb} batch shards "
               f"({args.devices} devices)", flush=True)
+
+    if args.sparsity:
+        try:
+            sparsities = [float(s) for s in args.sparsity.split(",") if s]
+        except ValueError:
+            raise SystemExit(
+                f"--sparsity must be comma-separated floats, "
+                f"got {args.sparsity!r}")
+        bench_event_gating(backends, sparsities, batch=args.batch,
+                           n_slots=max(args.batch, 8))
 
     bench_engine_backends(backends, batch=args.batch,
                           activity=args.activity)
@@ -225,6 +321,7 @@ def main(argv=None) -> None:
             host_devices_forced=args.devices if args.devices > 1 else None,
             args={"batch": args.batch, "activity": args.activity,
                   "backend": args.backend, "streaming": args.streaming,
+                  "sparsity": args.sparsity,
                   "devices": args.devices, "mesh": args.mesh},
         )
 

@@ -1,0 +1,117 @@
+"""Event-camera inference on the event-driven sparse path, end to end.
+
+    PYTHONPATH=src python examples/event_camera.py [--backend pallas]
+
+The paper's defining property is that compute, weight traffic, and energy
+scale with spike ACTIVITY, not with model size. This example exercises
+that property with the repo's sparsest workload: synthetic DVS-gesture
+clips (~1-3 % dense) arrive as an AER event stream, run through the
+accelerator with the per-example event gate, and come back out as events —
+with the trace recorder measuring, from the real rasters, exactly how much
+work the sparsity saved:
+
+  1. render gesture clips and wrap them as one AER stream (wire format);
+  2. compile a random gesture SNN to a Cerebra-H program;
+  3. run AER-in/AER-out on the gated engine and verify BIT-identity with
+     the dense reference path (sparsity is an optimization, never an
+     approximation);
+  4. trace the run: measured SOPs + gated-vs-dense weight-block traffic
+     under both gate granularities;
+  5. price it: the Table V energy model evaluated on MEASURED counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import cerebra_h, energy
+from repro.core.engine import BACKENDS, GATES
+from repro.core.lif import LIFParams
+from repro.core.network import SNNetwork
+from repro.data import events as ev_data
+from repro.events import aer, trace
+
+
+def make_gesture_net(rng, n_in: int, *, hidden: int = 96,
+                     n_out: int = len(ev_data.GESTURES)) -> SNNetwork:
+    """Random sparse SNN over the sensor channels (untrained demo — the
+    example's claims are about the datapath, not accuracy)."""
+    n_neurons = hidden + n_out
+    W = np.zeros((n_in + n_neurons, n_neurons), np.float32)
+    W[:n_in, :hidden] = ((rng.random((n_in, hidden)) < 0.08)
+                         * rng.normal(0.0, 0.9, (n_in, hidden)))
+    W[n_in:n_in + hidden, hidden:] = (
+        (rng.random((hidden, n_out)) < 0.4)
+        * rng.normal(0.0, 0.6, (hidden, n_out)))
+    return SNNetwork(
+        n_inputs=n_in, n_neurons=n_neurons, weights=W,
+        params=LIFParams(decay_rate=0.25, threshold=1.0, reset_mode="zero"),
+        output_slice=(hidden, n_neurons))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="reference")
+    ap.add_argument("--gate", choices=GATES, default="per-example")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rng = np.random.default_rng(args.seed)
+
+    # 1. the stimulus is an EVENT STREAM, not a raster
+    stream, labels = ev_data.gesture_events(
+        "test", args.batch, steps=args.steps, size=args.size, seed=args.seed)
+    T, B, D = stream.shape
+    print(f"[event-camera] {B} gesture clips x {T} steps on a "
+          f"{args.size}x{args.size}x2 sensor: {int(stream.total)} events "
+          f"({100 * stream.sparsity:.2f}% dense)")
+
+    # 2. compile to the accelerator
+    net = make_gesture_net(rng, D)
+    prog = cerebra_h.compile_network(net)
+
+    # 3. event-gated AER-in/AER-out run, checked against the dense path
+    dense_ext = np.asarray(aer.aer_to_dense(stream))
+    ref = cerebra_h.make_engine(prog, "reference").run(dense_ext)
+    engine = cerebra_h.make_engine(prog, args.backend).with_gate(args.gate)
+    out = engine.run(stream,
+                     events_capacity=int(np.asarray(ref["spikes"]).sum()))
+    assert np.array_equal(np.asarray(out["spikes"]),
+                          np.asarray(ref["spikes"])), \
+        "event-gated AER path diverged from the dense reference"
+    out_events = out["events"]
+    print(f"[event-camera] backend={args.backend} gate={args.gate}: "
+          f"AER in -> {int(out_events.total)} spike events out, "
+          f"bit-identical to the dense reference")
+    counts = np.asarray(out["spikes"])[
+        :, :, np.asarray(prog.output_map)].sum(axis=0)
+    print(f"[event-camera] decoded gestures (untrained): "
+          f"{[ev_data.GESTURES[i] for i in counts.argmax(axis=-1)]}")
+
+    # 4. measured accounting from the real rasters
+    report = trace.trace_run(engine, dense_ext, out["spikes"])
+    print(f"[event-camera] trace: {report.summary()}")
+    tile, example = (report.traffic_ratio("batch-tile"),
+                     report.traffic_ratio("per-example"))
+    print(f"[event-camera] per-example gate fetches "
+          f"{100 * example:.1f}% of dense weight blocks "
+          f"(batch-tile gate: {100 * tile:.1f}%) -> "
+          f"{tile / max(example, 1e-9):.1f}x less traffic from "
+          f"per-example gating alone")
+
+    # 5. energy from MEASURED counts (not analytic estimates)
+    measured = trace.measured_counts(prog, dense_ext, out["spikes"])
+    model = energy.EnergyModel.calibrated()
+    uj = model.energy_uj(measured)
+    print(f"[event-camera] measured energy: {measured.sops:.0f} SOPs -> "
+          f"{uj['dynamic_uj']:.2f} uJ dynamic "
+          f"({model.e_sop_pj} pJ/SOP compute path, "
+          f"{uj['pj_per_sop_system']:.0f} pJ/SOP system incl. static)")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ from repro.core.lif import fire_reset, lif_init
 
 __all__ = [
     "BACKENDS",
+    "GATES",
     "MXU_EXACT_BOUND",
     "DecaySpec",
     "SpikeEngine",
@@ -48,6 +49,19 @@ __all__ = [
 ]
 
 BACKENDS: tuple[str, ...] = ("reference", "pallas", "pallas-mxu")
+
+# Event-gate granularity of the Pallas kernels (the Incoming Forwarder):
+#   "batch-tile"   one activity scalar per (8-example batch tile, source
+#                  block) — a fetch is skipped only when the WHOLE tile is
+#                  silent on that block (high-throughput batch inference).
+#   "per-example"  batch tile = 1: one activity scalar per (example,
+#                  source block), so each stream's silence skips its own
+#                  weight traffic — the serving mode, where slot batches
+#                  are mostly idle. Bit-identical outputs either way; the
+#                  gate only changes which already-zero work is skipped.
+GATES: tuple[str, ...] = ("batch-tile", "per-example")
+
+_GATE_TILE_BATCH = 8  # batch rows per activity scalar under "batch-tile"
 
 # f32 has a 24-bit significand: integer-valued accumulation stays exact
 # while every partial sum's magnitude is < 2^24.
@@ -151,10 +165,15 @@ class SpikeEngine:
         reset_mode: str,
         backend: str = "reference",
         interpret: bool | None = None,
+        gate: str = "batch-tile",
     ):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; expected one of {BACKENDS}"
+            )
+        if gate not in GATES:
+            raise ValueError(
+                f"unknown event gate {gate!r}; expected one of {GATES}"
             )
         weights_raw = jnp.asarray(weights_raw, jnp.int32)
         if weights_raw.ndim != 2:
@@ -191,6 +210,7 @@ class SpikeEngine:
         self.reset_mode = str(reset_mode)
         self.backend = backend
         self.interpret = interpret
+        self.gate = gate
         self._run_jit = None  # compiled scan, built lazily once per engine
         self._chunk_jit = None  # compiled masked chunk step (streaming path)
 
@@ -211,6 +231,18 @@ class SpikeEngine:
         from repro.distributed.spike_mesh import MeshSpikeEngine
 
         return MeshSpikeEngine.from_engine(self, mesh)
+
+    def with_gate(self, gate: str) -> "SpikeEngine":
+        """This engine's program re-hosted under another event-gate
+        granularity (bit-identical outputs; only skipped-zero work
+        differs). Returns ``self`` when the gate already matches."""
+        if gate == self.gate:
+            return self
+        return SpikeEngine(
+            self.weights_raw, self.n_inputs, decay=self.decay,
+            threshold_raw=self.threshold_raw, reset_mode=self.reset_mode,
+            backend=self.backend, interpret=self.interpret, gate=gate,
+        )
 
     # ------------------------------------------------------------------
     def init_carry(self, batch: int) -> dict:
@@ -256,6 +288,8 @@ class SpikeEngine:
                 threshold_raw=self.threshold_raw,
                 reset_mode=self.reset_mode,
                 use_mxu=(self.backend == "pallas-mxu"),
+                block_batch=(1 if self.gate == "per-example"
+                             else _GATE_TILE_BATCH),
                 interpret=self.interpret,
             )
         return {"v": v_out, "spikes": spikes}, spikes
@@ -336,15 +370,32 @@ class SpikeEngine:
         final, spikes = jax.lax.scan(step, carry, ext_spikes)
         return {"spikes": spikes, "v_final": final["v"]}
 
-    def run(self, ext_spikes) -> dict:
+    def run(self, ext_spikes, *, events_capacity: int | None = None,
+            events_policy: str = "error") -> dict:
         """Scan the engine over a spike train.
 
         Args:
-          ext_spikes: (T, B, n_inputs) in {0,1} (any int/float dtype).
+          ext_spikes: (T, B, n_inputs) in {0,1} (any int/float dtype), or
+            an :class:`~repro.events.aer.AERStream` addressing that shape
+            (the sparse external-input path; decoded by one jitted op).
+          events_capacity: when set, the output raster is ALSO returned as
+            an AER stream of at most this many events under
+            ``events_policy`` ("error" refuses a lossy encode, "drop"
+            keeps the earliest events and flags overflow).
         Returns:
           {'spikes': (T, B, n_phys) int32 raster,
-           'v_final': (B, n_phys) int32 membrane state after step T}.
+           'v_final': (B, n_phys) int32 membrane state after step T,
+           'events': AERStream of 'spikes' (only with events_capacity)}.
         """
+        from repro.events.aer import AERStream, aer_to_dense, dense_to_aer
+
+        if isinstance(ext_spikes, AERStream):
+            if ext_spikes.shape[2] != self.n_inputs:
+                raise ValueError(
+                    f"AER stream addresses {ext_spikes.shape[2]} sources; "
+                    f"engine expects {self.n_inputs} inputs"
+                )
+            ext_spikes = aer_to_dense(ext_spikes)
         ext_spikes = jnp.asarray(ext_spikes).astype(jnp.int32)
         if ext_spikes.ndim != 3 or ext_spikes.shape[2] != self.n_inputs:
             raise ValueError(
@@ -353,4 +404,8 @@ class SpikeEngine:
             )
         if self._run_jit is None:
             self._run_jit = jax.jit(self._run_impl)
-        return self._run_jit(self._scan_weights(), ext_spikes)
+        out = self._run_jit(self._scan_weights(), ext_spikes)
+        if events_capacity is not None:
+            out["events"] = dense_to_aer(
+                out["spikes"], events_capacity, policy=events_policy)
+        return out

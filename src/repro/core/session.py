@@ -234,7 +234,8 @@ class AcceleratorSession:
         return results
 
     # ------------------------------------------------------------------
-    def serve(self, name: str, *, n_slots: int = 4, chunk_steps: int = 8):
+    def serve(self, name: str, *, n_slots: int = 4, chunk_steps: int = 8,
+              gate: str | None = None):
         """Streaming entry: a :class:`~repro.serving.snn.ModelStream` view
         for one resident model.
 
@@ -245,6 +246,11 @@ class AcceleratorSession:
         ``serve`` calls reuse the cached server — views over the same
         group see (and compete for) the same slots, exactly like
         co-resident workloads on the physical array.
+
+        ``gate`` selects the event-gate granularity of the server's
+        engine (``"per-example"`` is the batch-tile=1 serving mode, where
+        idle slots skip their own weight traffic); outputs are
+        bit-identical under any gate.
 
         A later :meth:`deploy` changes the fused layout and invalidates
         outstanding views: using one afterwards raises (epoch check);
@@ -257,7 +263,10 @@ class AcceleratorSession:
         group = [m for m in self.models.values()
                  if self._lif_signature(m.program) == sig]
         group_key = (tuple(m.name for m in group), sig, self.backend)
-        key = group_key + (int(n_slots), int(chunk_steps))
+        # normalize gate=None to the engine's effective gate so a default
+        # serve and an explicit-default serve alias to ONE server key
+        gate = gate if gate is not None else self._fused_engine(group).gate
+        key = group_key + (int(n_slots), int(chunk_steps), gate)
         server = self._stream_servers.get(key)
         if server is None:
             # one server per group: mismatched slot parameters would
@@ -266,11 +275,13 @@ class AcceleratorSession:
                 if other[:3] == group_key:
                     raise ValueError(
                         f"group {group_key[0]} is already served with "
-                        f"n_slots={other[3]}, chunk_steps={other[4]}; "
-                        f"co-resident views must share one server"
+                        f"n_slots={other[3]}, chunk_steps={other[4]}, "
+                        f"gate={other[5]}; co-resident views must share "
+                        f"one server"
                     )
             server = SpikeServer(self._fused_engine(group),
-                                 n_slots=n_slots, chunk_steps=chunk_steps)
+                                 n_slots=n_slots, chunk_steps=chunk_steps,
+                                 gate=gate)
             self._stream_servers[key] = server
         ext_offset = 0
         for m in group:

@@ -169,10 +169,12 @@ class MeshSpikeEngine(SpikeEngine):
 
     def __init__(self, weights_raw, n_inputs: int, *, mesh: Mesh,
                  decay, threshold_raw: int, reset_mode: str,
-                 backend: str = "reference", interpret: bool | None = None):
+                 backend: str = "reference", interpret: bool | None = None,
+                 gate: str = "batch-tile"):
         super().__init__(
             weights_raw, n_inputs, decay=decay, threshold_raw=threshold_raw,
             reset_mode=reset_mode, backend=backend, interpret=interpret,
+            gate=gate,
         )
         missing = {NEURON_AXIS, BATCH_AXIS} - set(mesh.axis_names)
         if missing:
@@ -206,7 +208,19 @@ class MeshSpikeEngine(SpikeEngine):
             engine.weights_raw, engine.n_inputs, mesh=mesh,
             decay=engine.decay, threshold_raw=engine.threshold_raw,
             reset_mode=engine.reset_mode, backend=engine.backend,
-            interpret=engine.interpret,
+            interpret=engine.interpret, gate=engine.gate,
+        )
+
+    def with_gate(self, gate: str) -> "MeshSpikeEngine":
+        """Gate re-host that KEEPS the mesh (the base implementation would
+        silently fall back to a single-device engine)."""
+        if gate == self.gate:
+            return self
+        return MeshSpikeEngine(
+            self.weights_raw, self.n_inputs, mesh=self.mesh,
+            decay=self.decay, threshold_raw=self.threshold_raw,
+            reset_mode=self.reset_mode, backend=self.backend,
+            interpret=self.interpret, gate=gate,
         )
 
     @property

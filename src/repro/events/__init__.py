@@ -1,0 +1,20 @@
+"""Event-driven sparse spike subsystem — AER streams + measured traces.
+
+SNAP-V's efficiency story is event-driven sparsity: the Incoming Forwarder
+only fetches weight rows for sources that actually spiked, so compute,
+SRAM traffic, and energy all scale with spike activity. This package is
+the software home of that property:
+
+  aer    — fixed-capacity Address-Event Representation: ``(t, slot,
+           source)`` address tuples, jitted dense<->AER conversion with an
+           explicit overflow policy. The wire format of the spike-packet
+           paths, as data.
+  trace  — spike/SOP trace recorder: pure passes over real rasters (never
+           inside the scan, same discipline as the cost models) producing
+           MEASURED SOP counts and gated-vs-dense weight-traffic
+           accounting for the energy model.
+"""
+
+from repro.events import aer, trace  # noqa: F401
+from repro.events.aer import AERStream, aer_to_dense, dense_to_aer  # noqa: F401
+from repro.events.trace import SpikeTraceReport, trace_run  # noqa: F401

@@ -1,0 +1,143 @@
+"""Address-Event Representation: the sparse spike format.
+
+Neuromorphic hardware does not move rasters, it moves *events*: the spike
+packet paths of the paper carry ``(timestep, source address)`` tuples, and
+silence costs nothing. :class:`AERStream` is that wire format as data — a
+fixed-capacity array of ``(t, slot, source)`` address tuples plus a count,
+so a whole stream is one static-shape pytree that crosses jit boundaries
+without re-tracing per spike count.
+
+Contracts:
+
+  * **Addresses are sorted** lexicographically by ``(t, slot, source)`` —
+    the order events leave the array, and the order ``jnp.nonzero`` emits,
+    so dense -> AER -> dense is the identity whenever capacity suffices.
+  * **Fixed capacity, explicit overflow.** A stream holds at most
+    ``capacity`` events; ``total`` records how many the dense raster
+    actually contained. ``policy="error"`` refuses a lossy conversion
+    (host-side check on the jitted result); ``policy="drop"`` keeps the
+    EARLIEST ``capacity`` events (hardware event-queue semantics: when the
+    FIFO is full, late events are the ones lost) and flags
+    :attr:`AERStream.overflowed`.
+  * **Binary events.** Dense rasters are binarized (any nonzero is one
+    event); spike rasters in this repo are {0,1} already.
+
+Only ``jax`` is imported here — everything above (engine, serving, data)
+may depend on this module without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AERStream", "dense_to_aer", "aer_to_dense"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["addrs", "count", "total"],
+    meta_fields=["shape"],
+)
+@dataclasses.dataclass(frozen=True)
+class AERStream:
+    """A fixed-capacity sparse spike stream.
+
+    addrs: ``(capacity, 3)`` int32 — ``(t, slot, source)`` per event,
+      lexicographically sorted; rows past ``count`` are ``-1`` filler.
+    count: ``()`` int32 — events actually stored (<= capacity).
+    total: ``()`` int32 — events in the source raster; ``total > count``
+      iff the conversion overflowed (and was allowed to drop).
+    shape: static ``(T, B, S)`` dense shape the stream addresses.
+    """
+
+    addrs: jnp.ndarray
+    count: jnp.ndarray
+    total: jnp.ndarray
+    shape: tuple[int, int, int]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.addrs.shape[0])
+
+    @property
+    def overflowed(self) -> bool:
+        return int(self.total) > int(self.count)
+
+    @property
+    def sparsity(self) -> float:
+        """Fraction of dense (t, slot, source) sites that carry an event."""
+        t, b, s = self.shape
+        return float(self.total) / max(t * b * s, 1)
+
+    def __len__(self) -> int:
+        return int(self.count)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _dense_to_aer(dense, capacity: int):
+    nz = dense != 0
+    total = nz.sum(dtype=jnp.int32)
+    # row-major nonzero == (t, slot, source) lexicographic: truncation at
+    # `capacity` drops the LATEST events, matching a full hardware FIFO.
+    t, b, s = jnp.nonzero(nz, size=capacity, fill_value=-1)
+    addrs = jnp.stack([t, b, s], axis=-1).astype(jnp.int32)
+    return addrs, jnp.minimum(total, capacity), total
+
+
+def dense_to_aer(dense, capacity: int, *, policy: str = "error") -> AERStream:
+    """Convert a dense ``(T, B, S)`` raster to a fixed-capacity AER stream.
+
+    ``policy="error"`` raises :class:`OverflowError` when the raster holds
+    more than ``capacity`` events (no silent loss); ``policy="drop"``
+    keeps the earliest ``capacity`` events and marks the stream
+    ``overflowed``. The conversion itself is one jitted op either way —
+    the policy is enforced on the already-computed ``total`` at the host
+    boundary, where raising is possible.
+    """
+    if policy not in ("error", "drop"):
+        raise ValueError(
+            f"unknown overflow policy {policy!r}; expected 'error' or 'drop'"
+        )
+    dense = jnp.asarray(dense)
+    if dense.ndim != 3:
+        raise ValueError(
+            f"dense raster must be (T, B, S), got shape {dense.shape}"
+        )
+    capacity = int(capacity)
+    if capacity < 0:
+        raise ValueError(f"capacity must be >= 0, got {capacity}")
+    addrs, count, total = _dense_to_aer(dense, capacity)
+    stream = AERStream(addrs=addrs, count=count, total=total,
+                       shape=tuple(int(d) for d in dense.shape))
+    if policy == "error" and stream.overflowed:
+        raise OverflowError(
+            f"raster holds {int(total)} events but the stream capacity is "
+            f"{capacity}; raise capacity or use policy='drop'"
+        )
+    return stream
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def _aer_to_dense(addrs, count, shape: tuple[int, int, int]):
+    # Rows past `count` (and -1 filler) must not scatter. mode='drop' only
+    # ignores OUT-OF-BOUNDS indices and negative indices still wrap, so
+    # invalid rows are redirected to a positive sentinel past every axis.
+    oob = jnp.int32(max(shape) if shape else 1)
+    valid = (jnp.arange(addrs.shape[0]) < count)[:, None] & (addrs >= 0)
+    idx = jnp.where(valid, addrs, oob)
+    dense = jnp.zeros(shape, jnp.int32)
+    return dense.at[idx[:, 0], idx[:, 1], idx[:, 2]].set(1, mode="drop")
+
+
+def aer_to_dense(stream: AERStream) -> jnp.ndarray:
+    """Decode an AER stream back to its dense ``(T, B, S)`` {0,1} raster.
+
+    Exact inverse of :func:`dense_to_aer` on binary rasters whenever the
+    stream did not overflow; after a ``policy="drop"`` overflow it yields
+    the raster of the earliest ``capacity`` events.
+    """
+    return _aer_to_dense(stream.addrs, stream.count, stream.shape)

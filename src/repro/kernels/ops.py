@@ -99,12 +99,16 @@ def spike_timestep(sources, weights, v, *, decay_rate: float = 0.0,
     Bp, Sp = src_p.shape
     Pp = w_p.shape[1]
     nb, ns = Bp // block_batch, Sp // block_src
-    # event gate bitmap: any spike in the (batch-tile, source-block)?
-    activity = (
-        src_p.reshape(nb, block_batch, ns, block_src)
-        .sum(axis=(1, 3))
-        .astype(jnp.int32)
+    # Per-(example, source-block) activity scalars — the Incoming
+    # Forwarder's event ledger. The kernel gate consumes one scalar per
+    # (batch tile, source block): with block_batch == 1 (the per-example
+    # gate, SpikeEngine gate="per-example") the tile map IS the
+    # per-example map and every silent (example, block) pair skips its
+    # weight fetch; larger tiles OR their examples' rows together.
+    per_example = (
+        src_p.reshape(Bp, ns, block_src).sum(axis=2).astype(jnp.int32)
     )
+    activity = per_example.reshape(nb, block_batch, ns).sum(axis=1)
     fn = _ts.build_spike_timestep(
         Bp, Sp, Pp,
         decay_rate=decay_rate,

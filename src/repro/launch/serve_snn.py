@@ -28,7 +28,7 @@ import jax
 import numpy as np
 
 from repro.core import coding
-from repro.core.engine import BACKENDS
+from repro.core.engine import BACKENDS, GATES
 from repro.core.lif import LIFParams
 from repro.core.network import SNNetwork
 from repro.core.session import AcceleratorSession
@@ -143,6 +143,9 @@ def main(argv=None) -> None:
     ap.add_argument("--arrival-rate", type=float, default=4.0,
                     help="Poisson arrivals per chunk-round")
     ap.add_argument("--backend", choices=list(BACKENDS), default="reference")
+    ap.add_argument("--gate", choices=list(GATES), default=None,
+                    help="event-gate granularity of the serving engine "
+                         "(per-example = the batch-tile=1 serving mode)")
     ap.add_argument("--models", type=int, default=2,
                     help="co-resident models sharing the fused engine")
     ap.add_argument("--devices", type=int, default=1,
@@ -153,6 +156,9 @@ def main(argv=None) -> None:
                          "(default: 2 x N/2 when N allows)")
     ap.add_argument("--n-inputs", type=int, default=24)
     ap.add_argument("--n-neurons", type=int, default=48)
+    ap.add_argument("--intensity", type=float, default=0.25,
+                    help="stimulus intensity scale (Poisson spike rate "
+                         "cap); event workloads live well below 1.0")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.arrival_rate <= 0:
@@ -180,7 +186,8 @@ def main(argv=None) -> None:
         sess.deploy(name, make_net(rng, args.n_inputs, args.n_neurons))
     # serve AFTER all deploys: deploying invalidates the fused layout
     views = {name: sess.serve(name, n_slots=args.n_slots,
-                              chunk_steps=args.chunk) for name in names}
+                              chunk_steps=args.chunk, gate=args.gate)
+             for name in names}
     server = next(iter(views.values())).server
     assert all(v.server is server for v in views.values()), \
         "co-resident models must share one fused-engine server"
@@ -201,7 +208,8 @@ def main(argv=None) -> None:
     for uid in range(args.streams):
         key, k = jax.random.split(key)
         name = names[uid % len(names)]
-        intensity = rng.random((1, args.n_inputs)).astype(np.float32)
+        intensity = (args.intensity
+                     * rng.random((1, args.n_inputs)).astype(np.float32))
         spikes = np.asarray(coding.poisson_encode(
             k, intensity, args.steps_per_stream, dtype=np.int32))[:, 0]
         requests.append((uid, name, spikes))
@@ -215,6 +223,7 @@ def main(argv=None) -> None:
         i += n
 
     live: dict = {}           # uid -> [name, cursor]
+    out_chunks: dict = {uid: [] for uid, _, _ in requests}  # fused rasters
     t_arrive: dict = {}
     t_done: dict = {}
     t0 = time.perf_counter()
@@ -243,8 +252,10 @@ def main(argv=None) -> None:
                 done.append(uid)
         if fused_inputs:
             t_chunk0 = time.perf_counter()
-            server.feed(fused_inputs)
+            res = server.feed(fused_inputs)
             watch.observe(time.perf_counter() - t_chunk0, live_slots)
+            for uid, r in res.items():
+                out_chunks[uid].append(r["spikes"])
         for uid in done:
             name = live.pop(uid)[0]
             views[name].detach(uid)
@@ -262,6 +273,34 @@ def main(argv=None) -> None:
           f"(queueing under {args.n_slots} slots)")
     for line in watch.summary():
         print(line)
+
+    # event accounting over the streams actually served: per-stream spike
+    # sparsity, and the weight-block traffic the event gate would fetch
+    # on these rasters — per-example (batch-tile=1, what a gated serving
+    # engine skips per slot) vs the batch-tile OR — from events.trace.
+    from repro.core.engine import sources_raster
+    from repro.events.trace import block_traffic
+
+    in_sp = np.asarray([spikes.mean() for _, _, spikes in requests])
+    ext_stack = np.stack([views[name].embed(spikes)
+                          for _, name, spikes in requests], axis=1)
+    out_stack = np.stack([np.concatenate(out_chunks[uid], axis=0)
+                          for uid, _, _ in requests], axis=1)
+    out_sp = out_stack.mean(axis=(0, 2))
+    # the same boundary-capture convention the kernel gate sees
+    sources = np.asarray(sources_raster(ext_stack, out_stack))
+    gated, dense = block_traffic(sources, tile_batch=1)
+    tiled, tiled_dense = block_traffic(sources, tile_batch=8)
+    print(f"[serve-snn] stream spike sparsity: input mean "
+          f"{100 * in_sp.mean():.2f}% (p50 "
+          f"{100 * np.percentile(in_sp, 50):.2f}%), output mean "
+          f"{100 * out_sp.mean():.2f}%")
+    print(f"[serve-snn] event gate on served rasters: per-example "
+          f"{gated}/{dense} weight blocks ({100 * gated / dense:.1f}% of "
+          f"dense -> {dense / max(gated, 1):.1f}x traffic reduction; "
+          f"batch-tile OR fetches {100 * tiled / tiled_dense:.1f}% of its "
+          f"dense)"
+          + (f" [serving gate: {args.gate}]" if args.gate else ""))
 
 
 if __name__ == "__main__":

@@ -143,12 +143,20 @@ class SpikeServer:
     shards hold their SRAM slice, slot batch sharded over the ``batch``
     axis) with byte-identical ``feed`` semantics — streaming slot-batches
     run sharded with no change to any caller.
+
+    ``gate`` re-hosts the engine under another event-gate granularity
+    (see :data:`repro.core.engine.GATES`): serving slot batches are mostly
+    idle, so ``gate="per-example"`` — the batch-tile=1 mode — lets every
+    silent slot skip its own weight traffic instead of riding along with
+    the tile OR. Outputs are bit-identical under either gate.
     """
 
     def __init__(self, engine: SpikeEngine, *, n_slots: int = 8,
-                 chunk_steps: int = 8, mesh=None):
+                 chunk_steps: int = 8, mesh=None, gate: str | None = None):
         if chunk_steps <= 0:
             raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
+        if gate is not None:
+            engine = engine.with_gate(gate)
         if mesh is not None and getattr(engine, "mesh", None) is not mesh:
             engine = engine.to_mesh(mesh)
         self.engine = engine
@@ -264,6 +272,47 @@ class SpikeServer:
             st.steps += raster.shape[0]
             st.spike_count += int(raster.sum())
             out[uid] = {"spikes": raster, "counts": raster.sum(axis=0)}
+        return out
+
+    def feed_events(self, inputs: dict, *, out_capacity: int | None = None,
+                    out_policy: str = "error") -> dict:
+        """Event-driven :meth:`feed`: AER streams in, optionally AER out.
+
+        The sparse front door of the server — what arrives from an event
+        source (sensor, upstream model) is a stream of ``(t, slot,
+        source)`` addresses, not a raster. Each stream is decoded by one
+        jitted op, pushed through the SAME masked chunk step ``feed``
+        uses (so the byte-exactness contract carries over verbatim), and
+        the spike raster comes back — optionally re-encoded as AER.
+
+        Args:
+          inputs: {uid: AERStream} — each stream addresses a dense
+            ``(T_uid, 1, n_inputs)`` chunk (slot axis 1: a stream is one
+            lane; the slot address inside the server is the server's
+            business, not the caller's).
+          out_capacity: when set, each stream's result also carries
+            ``'events'``: its output raster as an AER stream of at most
+            this many events under ``out_policy``.
+        Returns:
+          {uid: {'spikes', 'counts'[, 'events']}} exactly as :meth:`feed`.
+        """
+        from repro.events.aer import aer_to_dense, dense_to_aer
+
+        dense_inputs: dict = {}
+        for uid, stream in inputs.items():
+            T, lanes, n_in = stream.shape
+            if lanes != 1 or n_in != self.engine.n_inputs:
+                raise ValueError(
+                    f"stream {uid!r}: AER chunk must address "
+                    f"(T, 1, {self.engine.n_inputs}), got {stream.shape}"
+                )
+            dense_inputs[uid] = np.asarray(aer_to_dense(stream))[:, 0, :]
+        out = self.feed(dense_inputs)
+        if out_capacity is not None:
+            for uid, res in out.items():
+                res["events"] = dense_to_aer(
+                    res["spikes"][:, None, :], out_capacity,
+                    policy=out_policy)
         return out
 
     def run_closed_loop(self, uid, controller, num_steps: int, ext0) -> dict:

@@ -1,0 +1,469 @@
+"""Event-subsystem contracts: AER round-trip, per-example gate parity,
+measured traces, and the event-camera workload.
+
+The load-bearing claims pinned here:
+
+  * dense -> AER -> dense is the IDENTITY whenever capacity suffices, for
+    any activity pattern (ragged, empty timesteps, bursts) — property-
+    tested with hypothesis, with deterministic companions that always run
+    (the scheduler-test pattern);
+  * overflow is explicit: ``policy="error"`` refuses lossy conversion,
+    ``policy="drop"`` keeps exactly the earliest ``capacity`` events;
+  * the per-example event gate and the AER input/output paths are
+    BIT-identical to the dense reference across backends x reset modes,
+    on the batch scan, the masked chunk step, and the streaming feed —
+    sparsity is an optimization, never an approximation;
+  * the trace recorder's measured counts agree with hand counts and with
+    the analytic cost-model pass (measured == analytic is the
+    cross-check that makes the energy rows trustworthy).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import cerebra_h
+from repro.core.engine import GATES, DecaySpec, SpikeEngine
+from repro.data import events as ev_data
+from repro.events.aer import AERStream, aer_to_dense, dense_to_aer
+from repro.events.trace import block_traffic, measured_counts, trace_run
+from repro.serving.snn import SpikeServer
+
+from conftest import make_random_net
+
+THRESH = 1 << 16
+
+
+def _raster(rng, T, B, S, density=0.2):
+    return (rng.random((T, B, S)) < density).astype(np.int32)
+
+
+def _engine(W, n_in, *, backend="reference", gate="batch-tile",
+            reset="zero", decay=None):
+    return SpikeEngine(W, n_in, decay=decay or DecaySpec.shift(0.25),
+                       threshold_raw=THRESH, reset_mode=reset,
+                       backend=backend, gate=gate)
+
+
+def _random_weights(rng, n_in, n_phys, density=0.3, wmax=1 << 14):
+    S = n_in + n_phys
+    W = (rng.random((S, n_phys)) < density) * rng.integers(
+        -wmax, wmax, (S, n_phys))
+    return jnp.asarray(W, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# AER round-trip: property test + deterministic companions
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(T=st.integers(1, 5), B=st.integers(1, 4), S=st.integers(1, 40),
+       density=st.floats(0.0, 0.7), pad=st.integers(0, 9),
+       seed=st.integers(0, 2**16))
+@pytest.mark.slow
+def test_aer_round_trip_property(T, B, S, density, pad, seed):
+    """dense -> AER -> dense is the identity for ANY activity pattern
+    when capacity >= event count (exact or with headroom)."""
+    rng = np.random.default_rng(seed)
+    dense = _raster(rng, T, B, S, density)
+    stream = dense_to_aer(dense, int(dense.sum()) + pad)
+    assert not stream.overflowed
+    assert int(stream.count) == int(stream.total) == int(dense.sum())
+    np.testing.assert_array_equal(np.asarray(aer_to_dense(stream)), dense)
+    # addresses are (t, slot, source) lexicographic — the event order
+    addrs = np.asarray(stream.addrs)[: int(stream.count)]
+    np.testing.assert_array_equal(addrs, addrs[np.lexsort(addrs.T[::-1])])
+
+
+def test_aer_round_trip_deterministic(rng):
+    """The same identity on fixed corner cases (always runs)."""
+    cases = [
+        np.zeros((3, 2, 5), np.int32),                   # silence
+        np.ones((2, 2, 4), np.int32),                    # saturation
+        np.zeros((4, 1, 7), np.int32),                   # one event
+        _raster(rng, 5, 3, 37, 0.15),                    # ragged activity
+    ]
+    cases[2][2, 0, 6] = 1
+    empty_mid = _raster(rng, 6, 2, 9, 0.4)
+    empty_mid[2:4] = 0                                    # empty timesteps
+    cases.append(empty_mid)
+    for dense in cases:
+        stream = dense_to_aer(dense, int(dense.sum()) + 3)
+        np.testing.assert_array_equal(
+            np.asarray(aer_to_dense(stream)), dense)
+        assert not stream.overflowed
+        assert len(stream) == int(dense.sum())
+
+
+def test_aer_overflow_policies():
+    dense = np.zeros((3, 1, 4), np.int32)
+    dense[0, 0, 1] = dense[1, 0, 0] = dense[2, 0, 3] = 1
+    with pytest.raises(OverflowError, match="capacity"):
+        dense_to_aer(dense, 2)
+    # drop keeps the EARLIEST capacity events (full-FIFO semantics)
+    stream = dense_to_aer(dense, 2, policy="drop")
+    assert stream.overflowed
+    assert (int(stream.count), int(stream.total)) == (2, 3)
+    expected = dense.copy()
+    expected[2, 0, 3] = 0  # the latest event is the one lost
+    np.testing.assert_array_equal(np.asarray(aer_to_dense(stream)), expected)
+
+
+def test_aer_validation_and_binarization():
+    with pytest.raises(ValueError, match="policy"):
+        dense_to_aer(np.zeros((1, 1, 1), np.int32), 1, policy="wrap")
+    with pytest.raises(ValueError, match=r"\(T, B, S\)"):
+        dense_to_aer(np.zeros((2, 3), np.int32), 4)
+    with pytest.raises(ValueError, match="capacity"):
+        dense_to_aer(np.zeros((1, 1, 1), np.int32), -1)
+    # multi-valued rasters binarize: any nonzero is ONE event
+    dense = np.zeros((2, 1, 3), np.int32)
+    dense[1, 0, 2] = 7
+    stream = dense_to_aer(dense, 4)
+    assert len(stream) == 1
+    np.testing.assert_array_equal(
+        np.asarray(aer_to_dense(stream)), (dense != 0).astype(np.int32))
+
+
+def test_aer_stream_is_a_pytree():
+    """AERStream crosses jit boundaries as a static-shape pytree."""
+    import jax
+
+    dense = np.zeros((2, 1, 3), np.int32)
+    dense[0, 0, 1] = 1
+    stream = dense_to_aer(dense, 4)
+    leaves = jax.tree_util.tree_leaves(stream)
+    assert len(leaves) == 3  # addrs, count, total; shape is static meta
+    out = jax.jit(lambda s: s.count + 0)(stream)
+    assert int(out) == 1
+
+
+# --------------------------------------------------------------------------
+# Per-example gate + AER engine paths: bit-parity with the dense reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reset", ["zero", "subtract", "hold"])
+def test_per_example_gate_parity_run(rng, reset):
+    """Gated pallas batch scan == dense reference, all reset modes, on a
+    ragged (non-block-multiple) shape."""
+    B, n_in, n_phys, T = 5, 37, 48, 6
+    W = _random_weights(rng, n_in, n_phys)
+    ext = _raster(rng, T, B, n_in, 0.1)
+    ref = _engine(W, n_in, reset=reset).run(ext)
+    gated = _engine(W, n_in, backend="pallas", gate="per-example",
+                    reset=reset).run(ext)
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(gated["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["v_final"]),
+                                  np.asarray(gated["v_final"]))
+
+
+def test_aer_input_output_parity(rng):
+    """AER in == dense in; AER out decodes to the exact output raster."""
+    B, n_in, n_phys, T = 3, 29, 40, 5
+    W = _random_weights(rng, n_in, n_phys)
+    ext = _raster(rng, T, B, n_in, 0.15)
+    stream = dense_to_aer(ext, int(ext.sum()))
+    for backend, gate in [("reference", "batch-tile"),
+                          ("pallas", "per-example")]:
+        eng = _engine(W, n_in, backend=backend, gate=gate)
+        dense_out = eng.run(ext)
+        aer_out = eng.run(stream, events_capacity=int(
+            np.asarray(dense_out["spikes"]).sum()) + 2)
+        np.testing.assert_array_equal(np.asarray(dense_out["spikes"]),
+                                      np.asarray(aer_out["spikes"]))
+        np.testing.assert_array_equal(
+            np.asarray(aer_to_dense(aer_out["events"])),
+            np.asarray(dense_out["spikes"]))
+
+
+def test_engine_aer_validation(rng):
+    W = _random_weights(rng, 8, 8)
+    eng = _engine(W, 8)
+    bad = dense_to_aer(np.zeros((2, 1, 5), np.int32), 1)
+    with pytest.raises(ValueError, match="sources"):
+        eng.run(bad)
+    # above-threshold weights: every neuron spikes, so capacity 0 is lossy
+    W_hot = jnp.full((8 + 8, 8), 1 << 17, jnp.int32)
+    hot = _engine(W_hot, 8)
+    ext = np.ones((2, 1, 8), np.int32)
+    with pytest.raises(OverflowError):
+        hot.run(ext, events_capacity=0)  # default policy refuses loss
+    out = hot.run(ext, events_capacity=0, events_policy="drop")
+    assert out["events"].overflowed and int(out["events"].count) == 0
+
+
+def test_gate_validation_and_rehost(rng):
+    W = _random_weights(rng, 6, 10)
+    with pytest.raises(ValueError, match="gate"):
+        _engine(W, 6, gate="per-cluster")
+    eng = _engine(W, 6, backend="pallas")
+    assert eng.with_gate("batch-tile") is eng
+    gated = eng.with_gate("per-example")
+    assert gated.gate == "per-example" and gated.backend == "pallas"
+    assert gated.weights_raw is eng.weights_raw
+
+
+def test_mesh_engine_keeps_gate(rng):
+    """with_gate on a mesh engine must stay a mesh engine (degenerate
+    1x1 mesh keeps this covered on a single device)."""
+    from repro.distributed.spike_mesh import MeshSpikeEngine, make_spike_mesh
+
+    W = _random_weights(rng, 12, 16)
+    mesh = make_spike_mesh(neuron=1, batch=1)
+    eng = _engine(W, 12).to_mesh(mesh).with_gate("per-example")
+    assert isinstance(eng, MeshSpikeEngine)
+    assert eng.gate == "per-example" and eng.mesh is mesh
+    ext = _raster(np.random.default_rng(3), 4, 2, 12, 0.2)
+    ref = _engine(W, 12).run(ext)
+    np.testing.assert_array_equal(np.asarray(eng.run(ext)["spikes"]),
+                                  np.asarray(ref["spikes"]))
+
+
+def test_per_example_gate_parity_step_chunk(rng):
+    """Masked chunk step under the per-example gate: active slots advance
+    exactly, inactive slots keep their carry bit-for-bit."""
+    B, n_in, n_phys, T = 4, 21, 24, 6
+    W = _random_weights(rng, n_in, n_phys)
+    ext = _raster(rng, T, B, n_in, 0.25)
+    active = (rng.random((T, B)) < 0.6).astype(np.int32)
+    ref_e = _engine(W, n_in, reset="subtract")
+    gat_e = _engine(W, n_in, backend="pallas", gate="per-example",
+                    reset="subtract")
+    c_ref = ref_e.init_carry(B)
+    c_gat = gat_e.init_carry(B)
+    c_ref, s_ref = ref_e.step_chunk(c_ref, ext, active)
+    c_gat, s_gat = gat_e.step_chunk(c_gat, ext, active)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_gat))
+    for k in ("v", "spikes"):
+        np.testing.assert_array_equal(np.asarray(c_ref[k]),
+                                      np.asarray(c_gat[k]))
+
+
+def test_streaming_feed_parity_per_example_gate(rng):
+    """Chunked SpikeServer.feed on a per-example-gated engine is
+    byte-identical to the one-shot dense-reference scan, with a
+    co-resident stream churning in another slot."""
+    n_in, n_phys, T = 13, 16, 9
+    W = _random_weights(rng, n_in, n_phys, density=0.5)
+    ref_e = _engine(W, n_in, reset="hold")
+    srv = SpikeServer(_engine(W, n_in, backend="pallas", reset="hold"),
+                      n_slots=3, chunk_steps=4, gate="per-example")
+    assert srv.engine.gate == "per-example"
+    a, b = srv.attach(), srv.attach()
+    ra = _raster(rng, T, 1, n_in, 0.3)[:, 0]
+    rb = _raster(rng, T + 2, 1, n_in, 0.2)[:, 0]  # ragged lengths
+    out = srv.feed({a: ra, b: rb})
+    for uid, raster in [(a, ra), (b, rb)]:
+        solo = ref_e.run(raster[:, None, :])["spikes"][:, 0]
+        np.testing.assert_array_equal(out[uid]["spikes"], np.asarray(solo))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["pallas", "pallas-mxu"])
+@pytest.mark.parametrize("reset", ["zero", "subtract", "hold"])
+@pytest.mark.parametrize("decay_kind", ["shift", "mul"])
+def test_event_paths_full_sweep(rng, backend, reset, decay_kind):
+    """The acceptance sweep: per-example gate + AER input + streaming
+    feed, bit-identical to the dense reference, across backends x reset
+    modes x decay units."""
+    decay = (DecaySpec.shift(0.25) if decay_kind == "shift"
+             else DecaySpec.mul(int(0.8 * 65536)))
+    B, n_in, n_phys, T = 5, 37, 48, 7
+    W = _random_weights(rng, n_in, n_phys, wmax=1 << 13)
+    ext = _raster(rng, T, B, n_in, 0.12)
+    ref = _engine(W, n_in, reset=reset, decay=decay).run(ext)
+    eng = _engine(W, n_in, backend=backend, gate="per-example",
+                  reset=reset, decay=decay)
+    # batch run, fed by AER, emitting AER
+    out = eng.run(dense_to_aer(ext, int(ext.sum())),
+                  events_capacity=int(np.asarray(ref["spikes"]).sum()))
+    np.testing.assert_array_equal(np.asarray(ref["spikes"]),
+                                  np.asarray(out["spikes"]))
+    np.testing.assert_array_equal(np.asarray(ref["v_final"]),
+                                  np.asarray(out["v_final"]))
+    np.testing.assert_array_equal(
+        np.asarray(aer_to_dense(out["events"])), np.asarray(ref["spikes"]))
+    # streaming feed_events on the same program
+    srv = SpikeServer(eng, n_slots=2, chunk_steps=3)
+    uid = srv.attach()
+    res = srv.feed_events(
+        {uid: dense_to_aer(ext[:, :1], max(int(ext[:, :1].sum()), 1))},
+        out_capacity=int(np.asarray(ref["spikes"][:, 0]).sum()) + 1)
+    np.testing.assert_array_equal(res[uid]["spikes"],
+                                  np.asarray(ref["spikes"][:, 0]))
+    np.testing.assert_array_equal(
+        np.asarray(aer_to_dense(res[uid]["events"]))[:, 0],
+        np.asarray(ref["spikes"][:, 0]))
+
+
+# --------------------------------------------------------------------------
+# Serving event paths (deterministic, always run)
+# --------------------------------------------------------------------------
+
+def test_feed_events_matches_feed(rng):
+    n_in, n_phys, T = 11, 12, 6
+    W = _random_weights(rng, n_in, n_phys, density=0.5)
+    srv_a = SpikeServer(_engine(W, n_in), n_slots=2, chunk_steps=4)
+    srv_b = SpikeServer(_engine(W, n_in), n_slots=2, chunk_steps=4)
+    u_a, u_b = srv_a.attach(), srv_b.attach()
+    chunk = _raster(rng, T, 1, n_in, 0.3)
+    dense_out = srv_a.feed({u_a: chunk[:, 0]})
+    ev_out = srv_b.feed_events(
+        {u_b: dense_to_aer(chunk, int(chunk.sum()))},
+        out_capacity=64)
+    np.testing.assert_array_equal(dense_out[u_a]["spikes"],
+                                  ev_out[u_b]["spikes"])
+    np.testing.assert_array_equal(
+        np.asarray(aer_to_dense(ev_out[u_b]["events"]))[:, 0],
+        ev_out[u_b]["spikes"])
+
+
+def test_feed_events_validation(rng):
+    W = _random_weights(rng, 6, 8)
+    srv = SpikeServer(_engine(W, 6), n_slots=1, chunk_steps=2)
+    uid = srv.attach()
+    wide = dense_to_aer(np.zeros((2, 2, 6), np.int32), 1)
+    with pytest.raises(ValueError, match="AER chunk"):
+        srv.feed_events({uid: wide})
+    wrong = dense_to_aer(np.zeros((2, 1, 5), np.int32), 1)
+    with pytest.raises(ValueError, match="AER chunk"):
+        srv.feed_events({uid: wrong})
+
+
+def test_session_serve_gate_in_server_key(rng):
+    """A group served under one gate cannot be silently re-served under
+    another (separate carries would fork the stream state)."""
+    from repro.core.session import AcceleratorSession
+
+    sess = AcceleratorSession()
+    sess.deploy("m", make_random_net(rng, n_in=6, n_neurons=12))
+    view = sess.serve("m", n_slots=2, gate="per-example")
+    assert view.server.engine.gate == "per-example"
+    with pytest.raises(ValueError, match="already served"):
+        sess.serve("m", n_slots=2)
+    # gate=None and the explicit default alias to the SAME server key
+    sess2 = AcceleratorSession()
+    sess2.deploy("m", make_random_net(rng, n_in=6, n_neurons=12))
+    v_default = sess2.serve("m", n_slots=2)
+    v_explicit = sess2.serve("m", n_slots=2, gate="batch-tile")
+    assert v_explicit.server is v_default.server
+
+
+# --------------------------------------------------------------------------
+# Trace recorder: measured counts
+# --------------------------------------------------------------------------
+
+def test_block_traffic_hand_checked():
+    # T=2, B=3, S=4; block_src=2 -> 2 source blocks; tile_batch=2 -> 2
+    # batch tiles (second tile is one padded row).
+    src = np.zeros((2, 3, 4), np.int32)
+    src[0, 0, 0] = 1          # t0: tile0 touches block0
+    src[0, 2, 3] = 1          # t0: tile1 touches block1
+    src[1, 1, 1] = 1          # t1: tile0 touches block0
+    touched, total = block_traffic(src, block_src=2, tile_batch=2)
+    assert (touched, total) == (3, 2 * 2 * 2)
+    per_ex, per_total = block_traffic(src, block_src=2, tile_batch=1)
+    assert (per_ex, per_total) == (3, 2 * 3 * 2)
+    assert block_traffic(np.zeros((2, 3, 4), np.int32),
+                         block_src=2, tile_batch=1) == (0, 12)
+
+
+def test_trace_run_measured_sops_hand_checked():
+    # 2 inputs, 2 neurons; input0 fans out to both neurons, input1 to
+    # none, neuron0 feeds neuron1. Thresholds high: no output spikes.
+    W = jnp.asarray([[1 << 10, 1 << 10],      # input 0: fanout 2
+                     [0, 0],                   # input 1: fanout 0
+                     [0, 1 << 10],             # neuron 0: fanout 1
+                     [0, 0]], jnp.int32)       # neuron 1: fanout 0
+    eng = _engine(W, 2)
+    ext = np.zeros((3, 1, 2), np.int32)
+    ext[0, 0, 0] = 1   # 2 SOPs
+    ext[1, 0, 1] = 1   # 0 SOPs
+    ext[2, 0, 0] = 1   # 2 SOPs
+    out = eng.run(ext)
+    rep = trace_run(eng, ext, out["spikes"])
+    assert rep.measured_sops == 4
+    assert rep.source_events == 3
+    assert rep.output_events == int(np.asarray(out["spikes"]).sum())
+    assert rep.dense_sops == 3 * 1 * 3  # T*B*sum(fanout)
+    assert 0.0 < rep.source_sparsity < 1.0
+    assert "SOPs" in rep.summary()
+
+
+def test_trace_accepts_aer_streams(rng):
+    W = _random_weights(rng, 9, 12)
+    eng = _engine(W, 9)
+    ext = _raster(rng, 4, 2, 9, 0.3)
+    out = eng.run(ext)["spikes"]
+    dense_rep = trace_run(eng, ext, out)
+    aer_rep = trace_run(eng, dense_to_aer(ext, int(ext.sum())),
+                        dense_to_aer(out, int(np.asarray(out).sum())))
+    assert dense_rep == aer_rep
+
+
+def test_measured_counts_agree_with_cost_model(rng):
+    """Measured event accounting == the analytic cost-model pass, on the
+    same rasters (the cross-check behind table_v --measured-sop)."""
+    from repro.core.mapping import ClusterGeometry
+
+    geom = ClusterGeometry(n_clusters=4, neurons_per_cluster=4,
+                           clusters_per_group=2, rows_per_group=64,
+                           clusters_per_l1=2)
+    net = make_random_net(rng, n_in=5, n_neurons=12, density=0.5)
+    prog = cerebra_h.compile_network(net, cerebra_h.CerebraHConfig(
+        geometry=geom))
+    ext = _raster(rng, 8, 2, 5, 0.4)
+    out = cerebra_h.run(prog, ext)
+    counts = measured_counts(prog, ext, out["spikes"])
+    assert counts.sops == float(np.sum(np.asarray(out["sops"])))
+    assert counts.row_fetches == float(
+        np.sum(np.asarray(out["row_fetches"])))
+    assert counts.cycles == float(np.sum(np.asarray(out["cycles"])))
+
+
+# --------------------------------------------------------------------------
+# Event-camera workload
+# --------------------------------------------------------------------------
+
+def test_gesture_raster_contract():
+    d1, l1 = ev_data.gesture_raster("test", 5, steps=16, size=12, seed=3)
+    d2, l2 = ev_data.gesture_raster("test", 5, steps=16, size=12, seed=3)
+    np.testing.assert_array_equal(d1, d2)       # deterministic
+    np.testing.assert_array_equal(l1, l2)
+    assert d1.shape == (16, 5, ev_data.n_channels(12))
+    assert set(np.unique(d1)) <= {0, 1}
+    assert l1.min() >= 0 and l1.max() < len(ev_data.GESTURES)
+    assert 0.0 < d1.mean() < 0.15               # event-sparse
+    d3, _ = ev_data.gesture_raster("train", 5, steps=16, size=12, seed=3)
+    assert not np.array_equal(d1, d3)           # splits differ
+
+
+def test_gesture_events_round_trip():
+    stream, labels = ev_data.gesture_events("test", 3, steps=12, size=10,
+                                            seed=1)
+    assert isinstance(stream, AERStream)
+    assert not stream.overflowed                # auto-sized capacity
+    dense, labels2 = ev_data.gesture_raster("test", 3, steps=12, size=10,
+                                            seed=1)
+    np.testing.assert_array_equal(np.asarray(aer_to_dense(stream)), dense)
+    np.testing.assert_array_equal(labels, labels2)
+
+
+def test_gesture_classes_distinct():
+    """Different trajectories produce different event streams (the labels
+    carry signal even though the demo net is untrained)."""
+    rng = np.random.default_rng(0)
+    del rng
+    d, labels = ev_data.gesture_raster("test", 16, steps=16, size=12,
+                                       seed=7)
+    by_class: dict = {}
+    for i, lab in enumerate(labels):
+        by_class.setdefault(int(lab), d[:, i])
+    classes = list(by_class)
+    assert len(classes) >= 2
+    a, b = by_class[classes[0]], by_class[classes[1]]
+    assert not np.array_equal(a, b)
