@@ -19,6 +19,11 @@ weight-block traffic and SOP reduction (measured from real rasters via
 ``events.trace``) per gate granularity (batch-tile vs per-example, the
 batch-tile=1 serving mode) x backend x serving occupancy.
 
+``--async`` adds the front-door axis: the ``AsyncSpikeFrontend`` request
+queue driven open-loop at under/overload on a virtual clock — outcome
+counts (done/rejected/dropped/expired), queue depth, and queue-wait vs
+service percentiles per backpressure policy (BENCH_pr5.json).
+
 ``--json out.json`` writes all results as machine-readable records per
 (backend, batch, occupancy, sparsity, gate, devices) — the repo's
 ``BENCH_*.json`` perf trajectory.
@@ -27,6 +32,7 @@ batch-tile=1 serving mode) x backend x serving occupancy.
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -37,6 +43,7 @@ from repro.core.engine import BACKENDS, GATES, DecaySpec, SpikeEngine
 from repro.distributed.spike_mesh import (ensure_host_devices,
                                           make_spike_mesh, parse_mesh_spec)
 from repro.events import trace
+from repro.serving.frontend import AsyncSpikeFrontend
 from repro.serving.snn import SpikeServer
 
 # NOTE: repro.kernels.ops/ref import the Pallas TPU machinery, which
@@ -194,7 +201,79 @@ def bench_event_gating(backends, sparsities, *, batch: int,
                      traffic_ratio=round(srep.traffic_ratio(gate), 4))
 
 
-def main(argv=None) -> None:
+def bench_async_frontend(backends, *, n_slots: int = 8,
+                         chunk_steps: int = 8, n_requests: int = 24,
+                         T: int = 32, activity: float = 0.05,
+                         queue_capacity: int = 6) -> None:
+    """The async front-door axis: admission queue vs the step loop.
+
+    Drives :class:`AsyncSpikeFrontend` on a VIRTUAL clock (1 unit per
+    pump round) so the queue dynamics are deterministic: requests arrive
+    open-loop at ``load_factor`` x the slot service rate (``n_slots *
+    chunk_steps / T`` streams per round at full occupancy). Underload
+    (0.5x) shows the queue staying shallow; overload (2x) shows depth
+    growth until backpressure (reject / drop-oldest) or a deadline sheds
+    load. Wall time over the whole run gives the served steps/s next to
+    the per-regime outcome counts and queue-wait / service percentiles
+    (in pump rounds — the virtual clock's unit).
+    """
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    rasters = [(rng.random((T, n_in)) < activity).astype(np.int32)
+               for _ in range(n_requests)]
+    service_rate = n_slots * chunk_steps / T  # streams retired per round
+    regimes = [(0.5, "reject", None), (2.0, "reject", None),
+               (2.0, "drop-oldest", None), (2.0, "reject", 3.0)]
+    for backend in backends:
+        engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero",
+                             backend=backend)
+        for load, policy, deadline_rounds in regimes:
+            server = SpikeServer(engine, n_slots=n_slots,
+                                 chunk_steps=chunk_steps)
+            t_virtual = [0.0]
+            fe = AsyncSpikeFrontend(
+                server, queue_capacity=queue_capacity, backpressure=policy,
+                deadline_ms=(None if deadline_rounds is None
+                             else deadline_rounds * 1e3),
+                clock=lambda t=t_virtual: t[0])
+            arrive_at = [i / (load * service_rate)
+                         for i in range(n_requests)]
+            i = 0
+            t0 = time.perf_counter()
+            while i < n_requests or not fe.idle:
+                while i < n_requests and arrive_at[i] <= t_virtual[0]:
+                    fe.submit(rasters[i])
+                    i += 1
+                fe.pump()
+                t_virtual[0] += 1.0
+            wall = time.perf_counter() - t0
+            m = fe.metrics()
+            c = m["counts"]
+            dl = ("" if deadline_rounds is None
+                  else f"_dl{deadline_rounds:g}")
+            emit(f"async/frontend_{backend}_load{load:g}_{policy}{dl}",
+                 wall * 1e6 / max(server.total_steps, 1),
+                 f"{c.get('done', 0)}/{n_requests} done, "
+                 f"{c.get('rejected', 0)} rej, {c.get('dropped', 0)} drop, "
+                 f"{c.get('expired', 0)} exp, queue depth max "
+                 f"{m['queue_depth']['max']}/{queue_capacity}, "
+                 f"offered {load:g}x service rate",
+                 kind="async_frontend", backend=backend, load_factor=load,
+                 policy=policy, deadline_rounds=deadline_rounds,
+                 n_requests=n_requests, n_slots=n_slots,
+                 queue_capacity=queue_capacity,
+                 done=c.get("done", 0), rejected=c.get("rejected", 0),
+                 dropped=c.get("dropped", 0), expired=c.get("expired", 0),
+                 queue_depth_max=m["queue_depth"]["max"],
+                 queue_wait_p50_rounds=m["queue_wait"]["p50"],
+                 queue_wait_p95_rounds=m["queue_wait"]["p95"],
+                 service_p50_rounds=m["service"]["p50"],
+                 per_timestep=True)
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--activity", type=float, default=0.05,
@@ -205,6 +284,11 @@ def main(argv=None) -> None:
     ap.add_argument("--streaming", action="store_true",
                     help="also benchmark the SpikeServer slot-batch path "
                          "(masked chunk step vs one-shot batch scan)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="also benchmark the AsyncSpikeFrontend request "
+                         "queue: outcome counts + queue-wait/service "
+                         "percentiles per backpressure policy x offered "
+                         "load (under/overload on a virtual clock)")
     ap.add_argument("--sparsity", default=None, metavar="S1,S2,...",
                     help="comma list of source-activity levels for the "
                          "event-gating sweep: gated-vs-dense weight "
@@ -218,7 +302,11 @@ def main(argv=None) -> None:
                          "(default: 2 x N/2 when N allows)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results (BENCH_*.json)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
     if args.mesh and args.devices <= 1:
         raise SystemExit("--mesh requires --devices N (N > 1); without it "
                          "the sharded benches would silently not run")
@@ -264,6 +352,8 @@ def main(argv=None) -> None:
         if mesh is not None:
             bench_streaming(backends, n_slots=args.batch,
                             activity=args.activity, mesh=mesh)
+    if args.async_mode:
+        bench_async_frontend(backends, activity=args.activity)
 
     rng = np.random.default_rng(0)
     B, S, P = args.batch, 784 + 1024, 1024
@@ -321,7 +411,7 @@ def main(argv=None) -> None:
             host_devices_forced=args.devices if args.devices > 1 else None,
             args={"batch": args.batch, "activity": args.activity,
                   "backend": args.backend, "streaming": args.streaming,
-                  "sparsity": args.sparsity,
+                  "async": args.async_mode, "sparsity": args.sparsity,
                   "devices": args.devices, "mesh": args.mesh},
         )
 

@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Docs CI checker: no dead links, no phantom or undocumented flags.
+
+Two checks (the CI docs leg runs this; tests/test_docs.py runs it in
+tier-1 too):
+
+  1. **Links.** Every relative markdown link in README.md,
+     ARCHITECTURE.md, docs/*.md, and benchmarks/README.md must resolve
+     to an existing file, and every ``#anchor`` (same-file or
+     cross-file) must match a real heading's GitHub-style slug.
+     External (http/https/mailto) links are not fetched.
+  2. **Flags.** docs/serving.md is the launcher flag reference: every
+     ``--flag`` it documents must exist in the argparsers of
+     ``repro.launch.serve_snn`` and ``benchmarks/kernel_bench.py``
+     (no phantom flags), and every flag those parsers define must be
+     documented there (no undocumented flags).
+
+Prints each violation; exit code 0 when clean, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [
+    "README.md",
+    "ARCHITECTURE.md",
+    "docs/serving.md",
+    "docs/glossary.md",
+    "benchmarks/README.md",
+]
+
+FLAG_DOC = "docs/serving.md"
+
+# markdown inline links: [text](target) — target up to the first ')' or
+# whitespace (none of our docs use spaces or nested parens in targets)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FLAG_RE = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+_FENCE_RE = re.compile(r"^(```|~~~)", re.M)
+
+
+def strip_fences(text: str) -> str:
+    """Remove fenced code blocks (their '#' lines are not headings and
+    their contents are not markdown)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop everything but word
+    chars / spaces / hyphens, spaces -> hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(md_path: Path) -> set[str]:
+    slugs: set[str] = set()
+    for line in strip_fences(md_path.read_text()).splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            slugs.add(slugify(m.group(1)))
+    return slugs
+
+
+def check_links(doc_files=DOC_FILES, repo: Path = REPO) -> list[str]:
+    """Dead relative links / anchors across the doc set."""
+    problems = []
+    for rel in doc_files:
+        md = repo / rel
+        if not md.exists():
+            problems.append(f"{rel}: documentation file missing")
+            continue
+        for target in _LINK_RE.findall(strip_fences(md.read_text())):
+            if re.match(r"[a-z][a-z0-9+.-]*:", target):  # http:, mailto:
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else (
+                md.parent / path_part).resolve()
+            if not dest.exists():
+                problems.append(f"{rel}: dead link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if slugify(anchor) not in heading_slugs(dest):
+                    problems.append(
+                        f"{rel}: dead anchor -> {target} "
+                        f"(no such heading in {dest.name})")
+    return problems
+
+
+def parser_flag_sets(repo: Path = REPO) -> dict[str, set[str]]:
+    """{launcher name: set of --flags} from the real argparsers."""
+    for p in (str(repo / "src"), str(repo)):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from benchmarks.kernel_bench import build_parser as bench_parser
+    from repro.launch.serve_snn import build_parser as serve_parser
+
+    flags: dict[str, set[str]] = {}
+    for name, build in (("repro.launch.serve_snn", serve_parser),
+                        ("benchmarks/kernel_bench.py", bench_parser)):
+        opts: set[str] = set()
+        for action in build()._actions:
+            opts.update(o for o in action.option_strings
+                        if o.startswith("--") and o != "--help")
+        flags[name] = opts
+    return flags
+
+
+def check_flags(doc_text: str, parser_flags: dict[str, set[str]],
+                doc_name: str = FLAG_DOC) -> list[str]:
+    """Two-way flag sync, scoped per launcher section.
+
+    A ``##`` section whose heading names a launcher (by basename, e.g.
+    ``serve_snn``) must document exactly that launcher's flags: flags it
+    mentions must exist in THAT parser (a kernel_bench-only flag in the
+    serve_snn table is a violation, not a pass-by-union), and every flag
+    the parser defines must appear in the section. Flags mentioned
+    outside any launcher section must exist in at least one parser; a
+    launcher with no dedicated section falls back to
+    anywhere-in-the-doc coverage.
+    """
+    problems = []
+    known = set().union(*parser_flags.values())
+    documented_anywhere = set(_FLAG_RE.findall(doc_text))
+    base_of = {re.sub(r"\.py$", "", n).replace("/", ".").split(".")[-1]: n
+               for n in parser_flags}
+    parts = re.split(r"^(##\s+.*)$", doc_text, flags=re.M)
+    section_flags: dict[str, set[str]] = {}
+    loose = set(_FLAG_RE.findall(parts[0]))
+    for head, body in zip(parts[1::2], parts[2::2]):
+        owner = next((n for b, n in base_of.items() if b in head), None)
+        flags = set(_FLAG_RE.findall(body))
+        if owner is None:
+            loose |= flags
+        else:
+            section_flags.setdefault(owner, set()).update(flags)
+    problems += [f"{doc_name}: phantom flag {f} (no launcher defines it)"
+                 for f in sorted(loose - known)]
+    for launcher, flags in sorted(parser_flags.items()):
+        doc_flags = section_flags.get(launcher)
+        if doc_flags is None:
+            missing = flags - documented_anywhere
+        else:
+            problems += [
+                f"{doc_name}: {launcher} section documents {f}, which "
+                f"that launcher does not define"
+                for f in sorted(doc_flags - flags)]
+            missing = flags - doc_flags
+        problems += [f"{doc_name}: {launcher} flag {f} is undocumented"
+                     for f in sorted(missing)]
+    return problems
+
+
+def main() -> int:
+    problems = check_links()
+    flag_doc = REPO / FLAG_DOC
+    if flag_doc.exists():
+        problems += check_flags(flag_doc.read_text(), parser_flag_sets())
+    else:
+        problems.append(f"{FLAG_DOC}: flag reference missing")
+    for p in problems:
+        print(f"[check-docs] {p}")
+    if problems:
+        print(f"[check-docs] FAILED: {len(problems)} problem(s)")
+        return 1
+    n = len(DOC_FILES)
+    print(f"[check-docs] OK: {n} docs, links + launcher flag reference "
+          f"all verified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

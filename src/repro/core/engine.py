@@ -295,7 +295,13 @@ class SpikeEngine:
         return {"v": v_out, "spikes": spikes}, spikes
 
     def step(self, carry, ext_t):
-        """Public single-step entry (closed-loop / streaming callers)."""
+        """Public single-step entry (closed-loop / streaming callers).
+
+        One timestep of the batch scan body, un-jitted: ``(carry,
+        ext_t (B, n_inputs)) -> (carry', spikes_t)``. Chaining ``step`` T
+        times is bit-identical to one :meth:`run` over the stacked train
+        (same backend dispatch, same shared epilogue).
+        """
         return self._step(self.weights_raw, carry, ext_t)
 
     # ------------------------------------------------------------------
@@ -386,6 +392,14 @@ class SpikeEngine:
           {'spikes': (T, B, n_phys) int32 raster,
            'v_final': (B, n_phys) int32 membrane state after step T,
            'events': AERStream of 'spikes' (only with events_capacity)}.
+
+        Exactness: every backend returns bit-identical rasters (the
+        pallas-mxu 2^24 bound is enforced at engine build, so an engine
+        that constructs cannot mis-accumulate), under any ``gate``.
+        Static shapes: the whole scan is jitted once per engine and
+        reused across calls; one XLA program serves every call of the
+        same ``(T, B)`` shape (AER inputs decode through one jitted op at
+        the stream's fixed capacity — no retrace per spike count).
         """
         from repro.events.aer import AERStream, aer_to_dense, dense_to_aer
 

@@ -70,6 +70,9 @@ class AcceleratorSession:
         # SpikeServer} — co-resident models with a shared LIF config
         # stream through ONE server (and one compiled step).
         self._stream_servers: dict = {}
+        # async front doors, keyed like the servers they queue for: all
+        # views over one server submit into ONE bounded request queue.
+        self._frontends: dict = {}
         # bumped on every deploy; outstanding ModelStream views check it
         # so a stale view fails loudly instead of streaming against a
         # pre-deploy fused layout.
@@ -116,6 +119,7 @@ class AcceleratorSession:
         self._next_input += net.n_inputs
         self._fused_engines.clear()   # resident set changed
         self._stream_servers.clear()  # fused layout changed with it
+        self._frontends.clear()       # queues die with their servers
         self._serve_epoch += 1        # invalidate outstanding stream views
         return model
 
@@ -235,7 +239,7 @@ class AcceleratorSession:
 
     # ------------------------------------------------------------------
     def serve(self, name: str, *, n_slots: int = 4, chunk_steps: int = 8,
-              gate: str | None = None):
+              gate: str | None = None, frontend=None):
         """Streaming entry: a :class:`~repro.serving.snn.ModelStream` view
         for one resident model.
 
@@ -252,10 +256,22 @@ class AcceleratorSession:
         idle slots skip their own weight traffic); outputs are
         bit-identical under any gate.
 
+        ``frontend`` (a :class:`~repro.serving.frontend.FrontendConfig`)
+        makes the returned view async-capable: ONE
+        :class:`~repro.serving.frontend.AsyncSpikeFrontend` is hung off
+        the group's shared server (co-resident views share its bounded
+        request queue like they share slots), and the view grows
+        ``submit``/``submit_events`` that enqueue model-local rasters
+        against it. The frontend changes only WHEN work runs — async
+        outputs stay byte-identical to synchronous ``feed``. Views served
+        later without ``frontend=`` still see the group's existing
+        frontend; a conflicting config raises.
+
         A later :meth:`deploy` changes the fused layout and invalidates
         outstanding views: using one afterwards raises (epoch check);
         call ``serve`` again after deploying.
         """
+        from repro.serving.frontend import AsyncSpikeFrontend
         from repro.serving.snn import ModelStream, SpikeServer
 
         model = self.models[name]
@@ -283,6 +299,25 @@ class AcceleratorSession:
                                  n_slots=n_slots, chunk_steps=chunk_steps,
                                  gate=gate)
             self._stream_servers[key] = server
+        fe = self._frontends.get(key)
+        if frontend is not None:
+            cfg = frontend
+            if fe is None:
+                fe = AsyncSpikeFrontend(
+                    server, queue_capacity=cfg.queue_capacity,
+                    backpressure=cfg.backpressure,
+                    deadline_ms=cfg.deadline_ms)
+                self._frontends[key] = fe
+            elif (fe.queue_capacity, fe.backpressure,
+                  fe.default_deadline_ms) != (cfg.queue_capacity,
+                                              cfg.backpressure,
+                                              cfg.deadline_ms):
+                raise ValueError(
+                    f"group {group_key[0]} already has a frontend with "
+                    f"queue_capacity={fe.queue_capacity}, "
+                    f"backpressure={fe.backpressure!r}, "
+                    f"deadline_ms={fe.default_deadline_ms}; co-resident "
+                    f"views must share one request queue")
         ext_offset = 0
         for m in group:
             if m.name == name:
@@ -299,6 +334,7 @@ class AcceleratorSession:
             phys_slice=(lo * npc, hi * npc),
             output_map=model.program.output_map,
             stale_check=lambda: self._serve_epoch != epoch,
+            frontend=fe,
         )
 
     def utilization(self) -> dict:

@@ -35,6 +35,7 @@ from repro.core.session import AcceleratorSession
 from repro.distributed.spike_mesh import (ensure_host_devices,
                                           make_spike_mesh, parse_mesh_spec)
 from repro.distributed.straggler import StragglerDetector, rebalance_shards
+from repro.serving.frontend import BACKPRESSURE, FrontendConfig
 
 
 def make_net(rng, n_in: int, n_neurons: int, *, density: float = 0.25,
@@ -130,7 +131,7 @@ class ShardLoadWatch:
         return lines
 
 
-def main(argv=None) -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=24,
                     help="total streams to serve")
@@ -141,7 +142,26 @@ def main(argv=None) -> None:
     ap.add_argument("--steps-per-stream", type=int, default=48,
                     help="inference timesteps each stream requests")
     ap.add_argument("--arrival-rate", type=float, default=4.0,
-                    help="Poisson arrivals per chunk-round")
+                    help="Poisson arrivals per chunk-round (sync mode) or "
+                         "per SECOND, open-loop (--async): async arrivals "
+                         "happen on the wall clock whether or not the step "
+                         "loop keeps up, so overload is observable")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="drive traffic through the AsyncSpikeFrontend "
+                         "request queue (admission decoupled from the "
+                         "step loop) instead of the synchronous loop")
+    ap.add_argument("--backpressure", choices=list(BACKPRESSURE),
+                    default="reject",
+                    help="frontend policy when the request queue is full "
+                         "(--async only): reject the new request, block "
+                         "the submitter, or drop the oldest queued one")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (--async only): requests "
+                         "past it are expired — refused while queued, "
+                         "evicted mid-stream with the slot carry zeroed")
+    ap.add_argument("--queue-capacity", type=int, default=32,
+                    help="bounded frontend request queue (--async only); "
+                         "backpressure engages beyond it")
     ap.add_argument("--backend", choices=list(BACKENDS), default="reference")
     ap.add_argument("--gate", choices=list(GATES), default=None,
                     help="event-gate granularity of the serving engine "
@@ -160,10 +180,88 @@ def main(argv=None) -> None:
                     help="stimulus intensity scale (Poisson spike rate "
                          "cap); event workloads live well below 1.0")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def _fmt_lat(stats: dict) -> str:
+    """'mean X ms, p50 Y ms, p95 Z ms' from a latency_percentiles dict."""
+    if stats["mean"] is None:
+        return "n/a (no samples)"
+    return (f"mean {stats['mean'] * 1e3:.1f} ms, "
+            f"p50 {stats['p50'] * 1e3:.1f} ms, "
+            f"p95 {stats['p95'] * 1e3:.1f} ms")
+
+
+def run_async(args, server, views, requests, rng) -> None:
+    """Open-loop async serving: arrivals on the wall clock, not the loop.
+
+    Requests are submitted at precomputed Poisson arrival TIMES (rate =
+    ``--arrival-rate`` per second) whether or not the pump loop has kept
+    up — the decoupling that makes overload observable: when arrivals
+    outpace the service rate the queue depth grows until backpressure
+    (reject / block / drop-oldest) or ``--deadline-ms`` expiry sheds
+    load, and the wait/service/total percentiles split cleanly. The loop
+    always terminates: every pump round retires, admits, or expires work,
+    and the request plan is finite (no deadlock under any overload).
+    """
+    fe = next(iter(views.values())).frontend
+    assert fe is not None and all(v.frontend is fe for v in views.values()), \
+        "co-resident views must share one frontend queue"
+    if args.devices > 1 or args.gate:
+        print("[serve-snn] note: the straggler watch and event-sparsity "
+              "summaries are sync-mode only; the async run reports the "
+              "front-door metrics below (the engine itself is still "
+              "sharded/gated as requested)")
+    arrive_at = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                          len(requests)))
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(requests) or not fe.idle:
+        now = time.perf_counter() - t0
+        while i < len(requests) and arrive_at[i] <= now:
+            uid, name, spikes = requests[i]
+            views[name].submit(spikes)
+            i += 1
+        if fe.idle:
+            # nothing queued or running: open-loop means we wait for the
+            # next ARRIVAL, not spin the step loop
+            if i < len(requests):
+                time.sleep(min(0.05, max(
+                    0.0, arrive_at[i] - (time.perf_counter() - t0))))
+            continue
+        fe.pump()
+    wall = time.perf_counter() - t0
+
+    m = fe.metrics()
+    c = m["counts"]
+    steps = server.total_steps
+    offered = len(requests) / arrive_at[-1]
+    print(f"[serve-snn] async front door: {len(requests)} requests offered "
+          f"open-loop at {offered:.1f}/s (policy={args.backpressure}, "
+          f"queue capacity {fe.queue_capacity}, deadline "
+          f"{args.deadline_ms} ms), served in {wall:.2f}s over "
+          f"{m['rounds']} pump rounds")
+    print(f"[serve-snn] outcomes: {c.get('done', 0)} done, "
+          f"{c.get('rejected', 0)} rejected, {c.get('dropped', 0)} "
+          f"dropped, {c.get('expired', 0)} expired "
+          f"({c.get('expired_queued', 0)} queued / "
+          f"{c.get('expired_running', 0)} mid-stream), "
+          f"{c.get('cancelled', 0)} cancelled; "
+          f"{steps} stream-timesteps -> {steps / wall:.0f} steps/s")
+    print(f"[serve-snn] queue depth: max {m['queue_depth']['max']}, "
+          f"mean {m['queue_depth']['mean']:.1f} "
+          f"(capacity {fe.queue_capacity})")
+    print(f"[serve-snn] queue-wait: {_fmt_lat(m['queue_wait'])}")
+    print(f"[serve-snn] service:    {_fmt_lat(m['service'])}")
+    print(f"[serve-snn] total:      {_fmt_lat(m['total'])}")
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
     if args.arrival_rate <= 0:
-        raise SystemExit("--arrival-rate must be > 0 (expected arrivals "
-                         "per round; the arrival plan cannot make progress "
+        raise SystemExit("--arrival-rate must be > 0 (arrivals per "
+                         "chunk-round in sync mode, per second with "
+                         "--async; the arrival plan cannot make progress "
                          "at rate 0)")
     if args.mesh and args.devices <= 1:
         raise SystemExit("--mesh requires --devices N (N > 1); without it "
@@ -185,8 +283,15 @@ def main(argv=None) -> None:
     for name in names:
         sess.deploy(name, make_net(rng, args.n_inputs, args.n_neurons))
     # serve AFTER all deploys: deploying invalidates the fused layout
+    frontend_cfg = None
+    if args.async_mode:
+        frontend_cfg = FrontendConfig(
+            queue_capacity=args.queue_capacity,
+            backpressure=args.backpressure,
+            deadline_ms=args.deadline_ms)
     views = {name: sess.serve(name, n_slots=args.n_slots,
-                              chunk_steps=args.chunk, gate=args.gate)
+                              chunk_steps=args.chunk, gate=args.gate,
+                              frontend=frontend_cfg)
              for name in names}
     server = next(iter(views.values())).server
     assert all(v.server is server for v in views.values()), \
@@ -213,6 +318,10 @@ def main(argv=None) -> None:
         spikes = np.asarray(coding.poisson_encode(
             k, intensity, args.steps_per_stream, dtype=np.int32))[:, 0]
         requests.append((uid, name, spikes))
+
+    if args.async_mode:
+        run_async(args, server, views, requests, rng)
+        return
 
     # Poisson arrivals: number of new requests per chunk-round
     arrivals: list[list] = []

@@ -17,7 +17,10 @@ Two layers:
 
 The SNN analogue — stateful spike streams over one compiled SpikeEngine
 step — lives in :mod:`repro.serving.snn` (:class:`~repro.serving.snn.
-SpikeServer` et al., re-exported here).
+SpikeServer` et al., re-exported here), with the async admission layer
+(bounded request queue decoupled from the step loop) in
+:mod:`repro.serving.frontend` (:class:`~repro.serving.frontend.
+AsyncSpikeFrontend`).
 """
 
 from __future__ import annotations
@@ -30,6 +33,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.frontend import (  # noqa: E402  (re-export)
+    AsyncSpikeFrontend,
+    FrontendConfig,
+    RequestHandle,
+)
 from repro.serving.snn import (  # noqa: E402  (re-export)
     ModelStream,
     SlotScheduler,
@@ -38,7 +46,8 @@ from repro.serving.snn import (  # noqa: E402  (re-export)
 )
 
 __all__ = ["Request", "Completion", "BatchServer", "Scheduler",
-           "SpikeServer", "SlotScheduler", "ModelStream", "StreamStats"]
+           "SpikeServer", "SlotScheduler", "ModelStream", "StreamStats",
+           "AsyncSpikeFrontend", "FrontendConfig", "RequestHandle"]
 
 
 @dataclasses.dataclass

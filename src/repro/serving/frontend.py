@@ -1,0 +1,508 @@
+"""Async serving front door — admission queue decoupled from the step loop.
+
+SNAP-V splits management from compute: the RISC-V SpikeCore admits and
+sequences work while the Cerebra array only ever executes timesteps. The
+streaming layer (:mod:`repro.serving.snn`) reproduced the compute half —
+one compiled masked chunk step serving resident streams — but its callers
+still coupled *admission* to *stepping*: a request could only arrive when
+the driver loop was between ``feed`` calls. This module is the management
+half: a bounded request queue in front of the server, drained into free
+:class:`~repro.serving.snn.SlotScheduler` slots between chunk steps by a
+pump loop — the same decoupling vLLM-style continuous batching uses for
+LLM serving (requests arrive on their own clock; the engine loop admits
+whatever is waiting whenever a slot frees up).
+
+The pieces:
+
+  * :class:`AsyncSpikeFrontend` — owns the bounded queue
+    (:meth:`~AsyncSpikeFrontend.submit` / :meth:`~AsyncSpikeFrontend.cancel`
+    / per-request deadlines / an explicit backpressure policy) and the
+    :meth:`~AsyncSpikeFrontend.pump` round that expires, admits, feeds one
+    chunk, and retires — recording queue-wait vs service vs total latency
+    per request.
+  * :class:`RequestHandle` — what ``submit`` returns: ``poll()`` the
+    request's state without blocking, ``result()`` when it is done.
+  * :class:`FrontendConfig` — the knob bundle ``session.serve(...,
+    frontend=)`` takes to hang a shared frontend off co-resident
+    :class:`~repro.serving.snn.ModelStream` views.
+
+Exactness contract (pinned by tests/test_serving_frontend.py): the
+frontend never touches the numerical path — every request's spikes go
+through the SAME masked chunk step ``SpikeServer.feed`` uses, and a slot
+is always power-on clean at admission (eviction zeroes it). Given the
+same realized admission order, async-served rasters are therefore
+byte-identical to direct synchronous ``feed`` of each request's full
+raster, for every backend x reset mode x gate x mesh. Admission order and
+slot assignment are themselves deterministic functions of the submit /
+cancel / pump sequence (FIFO queue, FIFO slot reuse) — a property test
+pins this.
+
+Backpressure policies (queue full at ``submit``):
+
+  * ``"reject"``  — the NEW request is refused (state ``"rejected"``; the
+    handle comes back so the caller can see it). Load shedding at the
+    door; the open-loop launcher's default.
+  * ``"block"``   — ``submit`` pumps the loop until a queue place frees
+    up (the closed-loop degradation: the submitting client waits).
+  * ``"drop-oldest"`` — the OLDEST queued request is dropped (state
+    ``"dropped"``) to make room; freshest-data semantics for sensor-like
+    traffic where a stale stimulus is worthless.
+
+Nothing here runs inside jit; the frontend is pure host-side bookkeeping
+around the already-compiled step (clock injectable for deterministic
+deadline tests).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import threading
+import time
+
+import numpy as np
+
+__all__ = [
+    "BACKPRESSURE",
+    "AsyncSpikeFrontend",
+    "FrontendConfig",
+    "RequestHandle",
+    "latency_percentiles",
+]
+
+BACKPRESSURE: tuple[str, ...] = ("reject", "block", "drop-oldest")
+
+# terminal request states (a handle in one of these never changes again)
+_TERMINAL = frozenset({"done", "cancelled", "expired", "rejected", "dropped"})
+
+# rolling-window size of the latency / queue-depth sample buffers: big
+# enough that percentiles describe hours of traffic, bounded so a
+# long-running front door cannot grow without limit
+_METRICS_WINDOW = 100_000
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Knobs for a frontend hung off ``session.serve(..., frontend=)``.
+
+    ``queue_capacity`` bounds the admission queue (backpressure engages
+    beyond it); ``backpressure`` picks the policy from
+    :data:`BACKPRESSURE`; ``deadline_ms`` is the default per-request
+    deadline (None = no deadline) measured on ``clock`` — requests past
+    it are expired by the pump whether queued or mid-stream.
+    """
+
+    queue_capacity: int = 32
+    backpressure: str = "reject"
+    deadline_ms: float | None = None
+
+
+@dataclasses.dataclass
+class _Request:
+    """Internal per-request record (callers see :class:`RequestHandle`)."""
+
+    rid: int
+    chunk: np.ndarray              # dense (T, n_inputs) external spikes
+    view: object | None            # ModelStream for embed/decode, or None
+    deadline: float | None         # absolute clock value, or None
+    submitted_at: float
+    events_capacity: int | None = None
+    events_policy: str = "error"
+    state: str = "queued"
+    uid: object = None             # server stream uid once admitted
+    cursor: int = 0                # timesteps fed so far
+    pieces: list = dataclasses.field(default_factory=list)
+    admitted_at: float | None = None
+    finished_at: float | None = None
+    result_cache: dict | None = None   # built once terminal, then reused
+
+    @property
+    def steps_total(self) -> int:
+        return int(self.chunk.shape[0])
+
+
+class RequestHandle:
+    """Caller-side view of one submitted request.
+
+    ``poll()`` never blocks; ``result()`` returns the decoded output once
+    the request is terminal (None while it is still queued/running, and
+    for requests that never ran). ``cancel()`` routes back through the
+    frontend.
+    """
+
+    def __init__(self, frontend: "AsyncSpikeFrontend", req: _Request):
+        self._frontend = frontend
+        self._req = req
+
+    @property
+    def rid(self) -> int:
+        """Frontend-assigned request id (submission order)."""
+        return self._req.rid
+
+    @property
+    def state(self) -> str:
+        return self._req.state
+
+    @property
+    def done(self) -> bool:
+        return self._req.state in _TERMINAL
+
+    def poll(self) -> dict:
+        """Non-blocking status: state, progress, and queue position."""
+        return self._frontend._poll(self._req)
+
+    def result(self) -> dict | None:
+        """The request's output once terminal (see
+        :meth:`AsyncSpikeFrontend.submit` for the shape); None while
+        pending or when the request never consumed a timestep."""
+        return self._frontend._result(self._req)
+
+    def timing(self) -> dict:
+        """{'queue_wait', 'service', 'total'} in seconds (None where the
+        request never reached that stage)."""
+        return self._frontend._timing(self._req)
+
+    def cancel(self) -> bool:
+        return self._frontend.cancel(self)
+
+
+def latency_percentiles(xs) -> dict:
+    """mean/p50/p95/max summary (seconds in, seconds out) of a latency
+    sample list; empty input yields an all-None dict."""
+    if not len(xs):
+        return {"mean": None, "p50": None, "p95": None, "max": None}
+    a = np.asarray(xs, np.float64)
+    return {
+        "mean": float(a.mean()),
+        "p50": float(np.percentile(a, 50)),
+        "p95": float(np.percentile(a, 95)),
+        "max": float(a.max()),
+    }
+
+
+class AsyncSpikeFrontend:
+    """Bounded admission queue + pump loop over one :class:`SpikeServer`.
+
+    The frontend NEVER steps the engine on its own clock: all compute
+    happens inside :meth:`pump`, which between two chunk steps (a) expires
+    requests past their deadline — queued ones are refused, mid-stream
+    ones are evicted with their slot carry zeroed exactly like any
+    eviction, (b) drains the queue head-first into free scheduler slots,
+    (c) feeds ONE ``chunk_steps`` service quantum for every running
+    stream in a single batched ``SpikeServer.feed`` dispatch, and
+    (d) retires finished streams, freeing their slots for the next
+    round's admission. ``submit`` only enqueues (or applies backpressure);
+    it is safe to call from another thread than the pump loop.
+
+    Exactness: requests ride the same masked chunk step ``feed`` uses, so
+    for the same realized admission order the per-request rasters are
+    byte-identical to synchronous ``feed`` — the queue changes WHEN work
+    runs, never what it computes.
+    """
+
+    def __init__(self, server, *, queue_capacity: int = 32,
+                 backpressure: str = "reject",
+                 deadline_ms: float | None = None,
+                 clock=time.perf_counter):
+        if queue_capacity <= 0:
+            raise ValueError(
+                f"queue_capacity must be positive, got {queue_capacity}")
+        if backpressure not in BACKPRESSURE:
+            raise ValueError(
+                f"unknown backpressure policy {backpressure!r}; expected "
+                f"one of {BACKPRESSURE}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be positive, got {deadline_ms}")
+        self.server = server
+        self.queue_capacity = int(queue_capacity)
+        self.backpressure = backpressure
+        self.default_deadline_ms = deadline_ms
+        self.clock = clock
+        self._lock = threading.RLock()
+        self._rid = itertools.count()
+        self._queue: collections.deque[_Request] = collections.deque()
+        self._running: dict = {}      # server uid -> _Request
+        # accounting — the sample buffers are bounded (rolling window of
+        # the most recent entries) so a long-running front door cannot
+        # leak memory; counts are plain integers and stay exact forever.
+        self.counts = collections.Counter()      # terminal-state counters
+        w = _METRICS_WINDOW
+        self.queue_wait = collections.deque(maxlen=w)  # submit->grant (s)
+        self.service = collections.deque(maxlen=w)     # grant->done (s)
+        self.total = collections.deque(maxlen=w)       # submit->done (s)
+        self.depth_samples = collections.deque(maxlen=w)  # depth per pump
+        self.rounds = 0
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        """Requests currently waiting for admission."""
+        with self._lock:
+            return len(self._queue)
+
+    @property
+    def n_running(self) -> int:
+        with self._lock:
+            return len(self._running)
+
+    @property
+    def idle(self) -> bool:
+        """True when no request is queued or running."""
+        with self._lock:
+            return not self._queue and not self._running
+
+    # -- submission --------------------------------------------------------
+    def submit(self, chunk, *, view=None, deadline_ms: float | None = None,
+               events_capacity: int | None = None,
+               events_policy: str = "error") -> RequestHandle:
+        """Enqueue a request: the full ``(T, n_inputs)`` external spike
+        raster one stream wants served.
+
+        Args:
+          chunk: (T, n_inputs) {0,1} spikes — model-local when ``view`` is
+            a :class:`~repro.serving.snn.ModelStream` (embedded into the
+            fused layout at feed time), server-wide otherwise. T >= 1.
+          view: optional ModelStream; its cluster range also decodes the
+            output (``session.serve(..., frontend=)`` routes through
+            here).
+          deadline_ms: overrides the frontend default; measured from
+            submission on the frontend clock. A request past its deadline
+            is EXPIRED by the pump — refused if still queued, evicted
+            mid-stream (slot carry zeroed, partial raster kept).
+          events_capacity/events_policy: when set, the result also
+            carries ``'events'`` — the output raster AER-encoded at this
+            capacity (see :meth:`SpikeServer.feed_events`).
+
+        Returns a :class:`RequestHandle`. Under backpressure (queue at
+        capacity) the policy decides: ``"reject"`` hands back an
+        already-terminal handle in state ``"rejected"``; ``"block"``
+        pumps until a place frees; ``"drop-oldest"`` drops the oldest
+        queued request and admits this one. ``result()`` of a finished
+        request: ``{'spikes': (T', n_phys) int32, 'counts'}`` (T' < T
+        with ``'partial': True`` when expired/cancelled mid-stream), the
+        view-decoded fields for view requests, plus ``'events'`` when
+        requested.
+        """
+        chunk = np.asarray(chunk, np.int32)
+        n_in = (view.n_inputs if view is not None
+                else self.server.engine.n_inputs)
+        if chunk.ndim != 2 or chunk.shape[1] != n_in:
+            raise ValueError(
+                f"request chunk must be (T, {n_in}), got {chunk.shape}")
+        if chunk.shape[0] == 0:
+            raise ValueError("request chunk must hold at least 1 timestep")
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+        with self._lock:
+            now = self.clock()
+            req = _Request(
+                rid=next(self._rid), chunk=chunk, view=view,
+                deadline=(None if deadline_ms is None
+                          else now + deadline_ms / 1e3),
+                submitted_at=now,
+                events_capacity=events_capacity,
+                events_policy=events_policy,
+            )
+            self.counts["submitted"] += 1
+            if len(self._queue) >= self.queue_capacity:
+                if self.backpressure == "reject":
+                    req.state = "rejected"
+                    self.counts["rejected"] += 1
+                    return RequestHandle(self, req)
+                if self.backpressure == "drop-oldest":
+                    oldest = self._queue.popleft()
+                    oldest.state = "dropped"
+                    self.counts["dropped"] += 1
+                else:  # "block": pump until a place frees up
+                    while len(self._queue) >= self.queue_capacity:
+                        progress = self.pump()
+                        if not any(progress[k] for k in
+                                   ("admitted", "retired", "expired",
+                                    "steps")):
+                            raise RuntimeError(
+                                "blocked submit cannot make progress: "
+                                "queue full and a pump round moved "
+                                "nothing (no free slots and no stream "
+                                "advancing)")
+            self._queue.append(req)
+            return RequestHandle(self, req)
+
+    def submit_events(self, stream, **kwargs) -> RequestHandle:
+        """AER-native :meth:`submit`: a ``(T, 1, n_inputs)`` AER stream in
+        (decoded through the same shared contract as
+        :meth:`SpikeServer.feed_events`), same handle back. Pass
+        ``events_capacity`` to get the output as AER too."""
+        from repro.serving.snn import decode_aer_chunk
+
+        view = kwargs.get("view")
+        n_in = (view.n_inputs if view is not None
+                else self.server.engine.n_inputs)
+        return self.submit(
+            decode_aer_chunk(stream, n_in, "AER request"), **kwargs)
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Withdraw a request. Queued: removed without ever touching the
+        server. Running: evicted mid-stream — the slot carry is zeroed
+        (detach semantics) and the partial raster is kept. Terminal:
+        returns False (too late)."""
+        req = handle._req
+        with self._lock:
+            if req.state == "queued":
+                self._queue.remove(req)
+                req.state = "cancelled"
+                self.counts["cancelled"] += 1
+                return True
+            if req.state == "running":
+                self.server.detach(req.uid)
+                del self._running[req.uid]
+                req.state = "cancelled"
+                req.finished_at = self.clock()
+                self.counts["cancelled"] += 1
+                return True
+            return False
+
+    # -- the pump ----------------------------------------------------------
+    def pump(self) -> dict:
+        """One admission + service round (call between chunk steps).
+
+        Order within the round: expire (queued refusals + mid-stream
+        evictions) -> admit queue head into every free slot -> ONE
+        batched ``feed`` of a ``chunk_steps`` quantum for all running
+        streams -> retire finished streams. Returns the round summary
+        ``{'admitted', 'retired', 'expired', 'steps', 'queue_depth'}``.
+        """
+        with self._lock:
+            now = self.clock()
+            summary = {"admitted": 0, "retired": 0, "expired": 0,
+                       "steps": 0}
+            # 1. deadline expiry — queued requests are refused outright
+            for req in [r for r in self._queue
+                        if r.deadline is not None and now > r.deadline]:
+                self._queue.remove(req)
+                req.state = "expired"
+                self.counts["expired"] += 1
+                self.counts["expired_queued"] += 1
+                summary["expired"] += 1
+            # ... mid-stream streams are evicted like any other eviction:
+            # detach zeroes the slot carry, so the next occupant powers
+            # up clean (pinned by tests/test_serving_frontend.py)
+            for uid, req in [(u, r) for u, r in self._running.items()
+                             if r.deadline is not None
+                             and now > r.deadline]:
+                self.server.detach(uid)
+                del self._running[uid]
+                req.state = "expired"
+                req.finished_at = now
+                self.counts["expired"] += 1
+                self.counts["expired_running"] += 1
+                summary["expired"] += 1
+            # 2. continuous-batching admission: queue head -> free slots
+            while self._queue and self.server.scheduler.free_slots > 0:
+                req = self._queue.popleft()
+                req.uid = self.server.attach()
+                req.admitted_at = now
+                req.state = "running"
+                self._running[req.uid] = req
+                self.queue_wait.append(now - req.submitted_at)
+                summary["admitted"] += 1
+            # 3. one service quantum for every running stream, batched
+            inputs = {}
+            for uid, req in self._running.items():
+                piece = req.chunk[req.cursor:
+                                  req.cursor + self.server.chunk_steps]
+                inputs[uid] = (req.view.embed(piece)
+                               if req.view is not None else piece)
+            if inputs:
+                out = self.server.feed(inputs)
+                for uid, res in out.items():
+                    req = self._running[uid]
+                    req.pieces.append(res["spikes"])
+                    req.cursor += res["spikes"].shape[0]
+                    summary["steps"] += res["spikes"].shape[0]
+            # 4. retire finished streams (slots free for the next round)
+            now = self.clock()
+            for uid in [u for u, r in self._running.items()
+                        if r.cursor >= r.steps_total]:
+                req = self._running.pop(uid)
+                self.server.detach(uid)
+                req.state = "done"
+                req.finished_at = now
+                self.counts["done"] += 1
+                self.service.append(now - req.admitted_at)
+                self.total.append(now - req.submitted_at)
+                summary["retired"] += 1
+            self.rounds += 1
+            self.depth_samples.append(len(self._queue))
+            summary["queue_depth"] = len(self._queue)
+            return summary
+
+    def drain(self, max_rounds: int | None = None) -> dict:
+        """Pump until idle (or ``max_rounds``); returns :meth:`metrics`.
+        Terminates for any finite workload: every round either advances a
+        running stream, admits, or expires — progress is monotone."""
+        while not self.idle:
+            if max_rounds is not None and max_rounds <= 0:
+                break
+            if max_rounds is not None:
+                max_rounds -= 1
+            self.pump()
+        return self.metrics()
+
+    # -- accounting --------------------------------------------------------
+    def metrics(self) -> dict:
+        """Front-door accounting: terminal-state counts, queue-wait /
+        service / total latency percentiles (seconds), and queue-depth
+        stats over the pump rounds so far."""
+        with self._lock:
+            depth = np.asarray(self.depth_samples or [0])
+            return {
+                "counts": dict(self.counts),
+                "queue_wait": latency_percentiles(self.queue_wait),
+                "service": latency_percentiles(self.service),
+                "total": latency_percentiles(self.total),
+                "queue_depth": {"max": int(depth.max()),
+                                "mean": float(depth.mean())},
+                "rounds": self.rounds,
+            }
+
+    # -- handle internals --------------------------------------------------
+    def _poll(self, req: _Request) -> dict:
+        with self._lock:
+            st = {"state": req.state, "steps_done": req.cursor,
+                  "steps_total": req.steps_total}
+            if req.state == "queued":
+                st["queue_position"] = self._queue.index(req)
+            return st
+
+    def _result(self, req: _Request) -> dict | None:
+        with self._lock:
+            if req.state not in _TERMINAL or not req.pieces:
+                return None
+            if req.result_cache is not None:
+                return req.result_cache
+            raster = np.concatenate(req.pieces, axis=0)
+            if req.view is not None:
+                res = req.view.decode(raster)
+            else:
+                res = {"spikes": raster, "counts": raster.sum(axis=0)}
+            if req.cursor < req.steps_total:
+                res["partial"] = True
+            if req.events_capacity is not None:
+                from repro.events.aer import dense_to_aer
+                res["events"] = dense_to_aer(
+                    res["spikes"][:, None, :], req.events_capacity,
+                    policy=req.events_policy)
+            req.result_cache = res
+            return res
+
+    def _timing(self, req: _Request) -> dict:
+        with self._lock:
+            qw = sv = tot = None
+            if req.admitted_at is not None:
+                qw = req.admitted_at - req.submitted_at
+            if req.finished_at is not None and req.admitted_at is not None:
+                sv = req.finished_at - req.admitted_at
+                tot = req.finished_at - req.submitted_at
+            return {"queue_wait": qw, "service": sv, "total": tot}

@@ -70,6 +70,13 @@ class SlotScheduler:
         return dict(self._slot_of)
 
     @property
+    def free_slots(self) -> int:
+        """Slots with no resident stream (an admission front door checks
+        this before attaching, so its own queue — not the scheduler's
+        waiting list — is the only place requests ever wait)."""
+        return len(self._free)
+
+    @property
     def waiting(self) -> list:
         """uids queued for admission, FIFO order (copy)."""
         return list(self._waiting)
@@ -115,6 +122,24 @@ class SlotScheduler:
             self._waiting.remove(uid)
         except ValueError:
             raise KeyError(f"stream {uid!r} is not waiting") from None
+
+
+def decode_aer_chunk(stream, n_inputs: int, label: str = "AER chunk"
+                     ) -> np.ndarray:
+    """Validate + decode a single-lane ``(T, 1, n_inputs)`` AER chunk to
+    its dense ``(T, n_inputs)`` raster — THE entry-point contract shared
+    by :meth:`SpikeServer.feed_events` and
+    :meth:`~repro.serving.frontend.AsyncSpikeFrontend.submit_events`
+    (one lane per stream: the slot address inside the server is the
+    server's business, not the caller's)."""
+    from repro.events.aer import aer_to_dense
+
+    T, lanes, n_src = stream.shape
+    if lanes != 1 or n_src != n_inputs:
+        raise ValueError(
+            f"{label}: AER chunk must address (T, 1, {n_inputs}), "
+            f"got {stream.shape}")
+    return np.asarray(aer_to_dense(stream))[:, 0, :]
 
 
 @dataclasses.dataclass
@@ -296,17 +321,13 @@ class SpikeServer:
         Returns:
           {uid: {'spikes', 'counts'[, 'events']}} exactly as :meth:`feed`.
         """
-        from repro.events.aer import aer_to_dense, dense_to_aer
+        from repro.events.aer import dense_to_aer
 
-        dense_inputs: dict = {}
-        for uid, stream in inputs.items():
-            T, lanes, n_in = stream.shape
-            if lanes != 1 or n_in != self.engine.n_inputs:
-                raise ValueError(
-                    f"stream {uid!r}: AER chunk must address "
-                    f"(T, 1, {self.engine.n_inputs}), got {stream.shape}"
-                )
-            dense_inputs[uid] = np.asarray(aer_to_dense(stream))[:, 0, :]
+        dense_inputs = {
+            uid: decode_aer_chunk(stream, self.engine.n_inputs,
+                                  f"stream {uid!r}")
+            for uid, stream in inputs.items()
+        }
         out = self.feed(dense_inputs)
         if out_capacity is not None:
             for uid, res in out.items():
@@ -378,7 +399,7 @@ class ModelStream:
 
     def __init__(self, server: SpikeServer, *, name: str, n_inputs: int,
                  ext_offset: int, phys_slice: tuple[int, int],
-                 output_map: np.ndarray, stale_check=None):
+                 output_map: np.ndarray, stale_check=None, frontend=None):
         self.server = server
         self.name = name
         self.n_inputs = int(n_inputs)
@@ -386,6 +407,9 @@ class ModelStream:
         self.phys_slice = (int(phys_slice[0]), int(phys_slice[1]))
         self.output_map = np.asarray(output_map)
         self._stale_check = stale_check
+        #: the group's shared AsyncSpikeFrontend when this view was served
+        #: with ``session.serve(..., frontend=)`` (None otherwise).
+        self.frontend = frontend
 
     def _check_fresh(self) -> None:
         if self._stale_check is not None and self._stale_check():
@@ -426,6 +450,31 @@ class ModelStream:
             "output_counts": counts[self.output_map],
             "predictions": int(np.argmax(counts[self.output_map])),
         }
+
+    def submit(self, chunk, **kwargs):
+        """Async entry: enqueue a full model-local ``(T, n_inputs)``
+        raster on the group's shared request queue and return a
+        :class:`~repro.serving.frontend.RequestHandle` (the frontend's
+        pump admits + serves it between chunk steps; the decoded result
+        is byte-identical to a synchronous :meth:`feed` of the same
+        raster). Requires the view to have been served with
+        ``session.serve(..., frontend=)``."""
+        self._check_fresh()
+        if self.frontend is None:
+            raise RuntimeError(
+                f"view {self.name!r} has no async frontend; pass "
+                f"frontend=FrontendConfig(...) to session.serve()")
+        return self.frontend.submit(chunk, view=self, **kwargs)
+
+    def submit_events(self, stream, **kwargs):
+        """AER-native :meth:`submit`: a ``(T, 1, n_inputs)`` model-local
+        AER stream in, same async handle back."""
+        self._check_fresh()
+        if self.frontend is None:
+            raise RuntimeError(
+                f"view {self.name!r} has no async frontend; pass "
+                f"frontend=FrontendConfig(...) to session.serve()")
+        return self.frontend.submit_events(stream, view=self, **kwargs)
 
     def feed(self, uid, chunk) -> dict:
         """Push (T, n_inputs) model-local external spikes; get the model's

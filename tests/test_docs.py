@@ -1,0 +1,89 @@
+"""Docs CI leg, importable: the documentation suite must stay sound.
+
+Runs scripts/check_docs.py's checks in-process — dead links/anchors in
+README / ARCHITECTURE / docs/ / benchmarks/README fail tier-1, and
+docs/serving.md must stay in two-way sync with the launchers' argparsers
+(no phantom flags documented, no parser flags undocumented). Negative
+cases prove the checker actually detects each violation class.
+"""
+
+import importlib.util
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "scripts" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/serving.md", "docs/glossary.md",
+                "benchmarks/README.md", "ARCHITECTURE.md"):
+        assert (REPO / rel).exists(), f"{rel} is part of the doc suite"
+
+
+def test_no_dead_links_or_anchors():
+    assert check_docs.check_links() == []
+
+
+def test_flag_reference_in_sync():
+    parser_flags = check_docs.parser_flag_sets()
+    # the parsers themselves must expose the async front-door surface
+    assert "--async" in parser_flags["repro.launch.serve_snn"]
+    assert "--backpressure" in parser_flags["repro.launch.serve_snn"]
+    assert "--deadline-ms" in parser_flags["repro.launch.serve_snn"]
+    assert "--async" in parser_flags["benchmarks/kernel_bench.py"]
+    doc = (REPO / "docs" / "serving.md").read_text()
+    assert check_docs.check_flags(doc, parser_flags) == []
+
+
+def test_checker_detects_dead_link(tmp_path):
+    (tmp_path / "doc.md").write_text("see [x](missing.md) and "
+                                     "[y](real.md#nope)\n# Real\n")
+    (tmp_path / "real.md").write_text("# Something else\n")
+    problems = check_docs.check_links(["doc.md"], repo=tmp_path)
+    assert len(problems) == 2
+    assert any("dead link" in p for p in problems)
+    assert any("dead anchor" in p for p in problems)
+
+
+def test_checker_detects_phantom_and_undocumented_flags():
+    parser_flags = {"launcher": {"--real", "--hidden"}}
+    problems = check_docs.check_flags("`--real` and `--made-up`",
+                                      parser_flags)
+    assert any("phantom flag --made-up" in p for p in problems)
+    assert any("--hidden is undocumented" in p for p in problems)
+
+
+def test_checker_scopes_flags_to_launcher_sections():
+    """A flag documented in the WRONG launcher's section is a violation
+    even though the other launcher defines it (no pass-by-union)."""
+    parser_flags = {"tools/alpha.py": {"--shared", "--alpha-only"},
+                    "pkg.beta": {"--shared", "--beta-only"}}
+    doc = ("## Launcher: `tools/alpha.py`\n"
+           "`--shared` `--alpha-only` `--beta-only`\n"
+           "## Launcher: `pkg.beta`\n"
+           "`--shared` `--beta-only`\n")
+    problems = check_docs.check_flags(doc, parser_flags)
+    assert problems == [
+        "docs/serving.md: tools/alpha.py section documents --beta-only, "
+        "which that launcher does not define"]
+
+
+def test_checker_ignores_fenced_code_and_external_links(tmp_path):
+    (tmp_path / "doc.md").write_text(
+        "[ext](https://example.com/x)\n"
+        "```sh\n# not a heading\n[fake](nowhere.md)\n```\n")
+    assert check_docs.check_links(["doc.md"], repo=tmp_path) == []
+
+
+def test_cli_entry_point_green():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_docs.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout

@@ -1,0 +1,388 @@
+"""Async front-door contracts: the queue changes WHEN, never WHAT.
+
+The acceptance criterion of the frontend: for the same realized admission
+order, ``AsyncSpikeFrontend``-served rasters are byte-identical to direct
+synchronous ``SpikeServer.feed`` / one-shot ``SpikeEngine.run`` of each
+request's full raster, for every backend x reset mode x gate (full sweep
+under ``slow``; the mesh cross is in tests/test_spike_mesh.py). Plus the
+front-door lifecycle contracts: cancel-while-queued never touches the
+server; deadline expiry mid-stream zeroes the slot carry exactly like any
+eviction; backpressure policies do what they say; and admission order +
+slot assignment is a deterministic function of the submit/cancel/pump
+sequence (hypothesis property with deterministic companions).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import BACKENDS, GATES, DecaySpec, SpikeEngine
+from repro.core.session import AcceleratorSession
+from repro.serving.frontend import (AsyncSpikeFrontend, FrontendConfig,
+                                    latency_percentiles)
+from repro.serving.snn import SpikeServer
+
+from conftest import make_random_net
+
+THRESH = 1 << 16
+RESET_MODES = ("zero", "subtract", "hold")
+
+
+class VirtualClock:
+    """Deterministic frontend clock: advances only when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _engine(rng, *, backend="reference", reset="subtract", gate="batch-tile",
+            n_in=10, n_phys=16, wmax=1 << 13):
+    S = n_in + n_phys
+    W = ((rng.random((S, n_phys)) < 0.4)
+         * rng.integers(-wmax, wmax, (S, n_phys)))
+    return SpikeEngine(jnp.asarray(W, jnp.int32), n_in,
+                       decay=DecaySpec.shift(0.25), threshold_raw=THRESH,
+                       reset_mode=reset, backend=backend, gate=gate)
+
+
+def _rasters(rng, lengths, n_in, p=0.35):
+    return [(rng.random((T, n_in)) < p).astype(np.int32) for T in lengths]
+
+
+# --------------------------------------------------------------------------
+# Async-vs-synchronous bit-identity
+# --------------------------------------------------------------------------
+
+def _assert_async_equals_sync(engine, rng, *, n_slots=2, chunk_steps=3,
+                              lengths=(7, 4, 1, 9, 5)):
+    """Everything submitted through the frontend must come back
+    byte-identical to a one-shot run of its raster (which PR 2 pinned
+    equal to synchronous ``feed``)."""
+    rasters = _rasters(rng, lengths, engine.n_inputs)
+    server = SpikeServer(engine, n_slots=n_slots, chunk_steps=chunk_steps)
+    fe = AsyncSpikeFrontend(server, queue_capacity=len(rasters))
+    handles = [fe.submit(r) for r in rasters]
+    m = fe.drain()
+    assert m["counts"]["done"] == len(rasters)
+    for h, r in zip(handles, rasters):
+        want = np.asarray(engine.run(r[:, None, :])["spikes"])[:, 0]
+        got = h.result()["spikes"]
+        assert got.dtype == want.dtype == np.int32
+        np.testing.assert_array_equal(got, want)
+        assert "partial" not in h.result()
+
+
+@pytest.mark.parametrize("reset", RESET_MODES)
+def test_async_bit_identity_reference(rng, reset):
+    _assert_async_equals_sync(_engine(rng, reset=reset), rng)
+
+
+def test_async_bit_identity_per_example_gate(rng):
+    _assert_async_equals_sync(_engine(rng, gate="per-example"), rng)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("reset", RESET_MODES)
+@pytest.mark.parametrize("gate", GATES)
+def test_async_bit_identity_sweep(rng, backend, reset, gate):
+    engine = _engine(rng, backend=backend, reset=reset, gate=gate)
+    _assert_async_equals_sync(engine, rng)
+
+
+def test_async_matches_direct_feed_same_admission_order(rng):
+    """The literal acceptance phrasing: replay the REALIZED admission
+    order synchronously through ``SpikeServer.feed`` and compare bytes."""
+    engine = _engine(rng)
+    rasters = _rasters(rng, (6, 3, 5), engine.n_inputs)
+    server = SpikeServer(engine, n_slots=2, chunk_steps=2)
+    fe = AsyncSpikeFrontend(server, queue_capacity=8)
+    handles = [fe.submit(r) for r in rasters]
+    order = []          # realized admission order, by request index
+    while not fe.idle:
+        before = {h.rid for h in handles if h.state == "queued"}
+        fe.pump()
+        after = {h.rid for h in handles if h.state == "queued"}
+        order += sorted(before - after)
+    sync_server = SpikeServer(engine, n_slots=2, chunk_steps=2)
+    for rid in order:
+        uid = sync_server.attach()
+        got = sync_server.feed({uid: rasters[rid]})[uid]["spikes"]
+        sync_server.detach(uid)
+        np.testing.assert_array_equal(handles[rid].result()["spikes"], got)
+
+
+# --------------------------------------------------------------------------
+# Lifecycle: cancel, deadlines, carry zeroing
+# --------------------------------------------------------------------------
+
+def test_cancel_while_queued_never_touches_server(rng):
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    fe = AsyncSpikeFrontend(server, queue_capacity=4)
+    a, b = (fe.submit(r) for r in _rasters(rng, (4, 4), engine.n_inputs))
+    fe.pump()  # a admitted + fed; b still queued
+    assert a.state == "running" and b.state == "queued"
+    assert b.cancel() is True
+    assert b.state == "cancelled" and b.result() is None
+    assert fe.queue_depth == 0
+    assert len(server.scheduler.active) == 1  # only a ever reached a slot
+    assert b.cancel() is False  # terminal: too late
+    fe.drain()
+    assert a.state == "done"
+
+
+def test_cancel_mid_stream_keeps_partial_and_zeroes_carry(rng):
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    fe = AsyncSpikeFrontend(server, queue_capacity=2)
+    raster = _rasters(rng, (8,), engine.n_inputs)[0]
+    h = fe.submit(raster)
+    fe.pump()
+    assert h.state == "running" and h.poll()["steps_done"] == 2
+    assert h.cancel() is True
+    res = h.result()
+    assert res["partial"] is True and res["spikes"].shape[0] == 2
+    want = np.asarray(engine.run(raster[:2, None, :])["spikes"])[:, 0]
+    np.testing.assert_array_equal(res["spikes"], want)
+    # eviction semantics: the freed slot is power-on clean
+    assert int(np.abs(np.asarray(server.carry["v"])).sum()) == 0
+    assert int(np.asarray(server.carry["spikes"]).sum()) == 0
+
+
+def test_deadline_expiry_queued_vs_mid_stream(rng):
+    """A queued request past its deadline is refused; a running one is
+    evicted with the slot carry zeroed like any eviction, and the next
+    occupant powers up from clean state (byte-identical to a fresh run)."""
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    clock = VirtualClock()
+    fe = AsyncSpikeFrontend(server, queue_capacity=4, clock=clock)
+    ra, rb, rc = _rasters(rng, (8, 8, 6), engine.n_inputs)
+    a = fe.submit(ra, deadline_ms=1_000)   # will expire mid-stream
+    b = fe.submit(rb, deadline_ms=1_000)   # will expire while queued
+    c = fe.submit(rc)                      # no deadline: must run clean
+    fe.pump()
+    assert a.state == "running" and b.state == "queued"
+    clock.t = 2.0  # both deadlines (t=1.0) now past
+    fe.pump()
+    assert a.state == "expired" and b.state == "expired"
+    assert a.result()["partial"] is True   # kept what was served
+    assert b.result() is None              # never consumed a timestep
+    m = fe.metrics()["counts"]
+    assert m["expired_running"] == 1 and m["expired_queued"] == 1
+    fe.drain()
+    want = np.asarray(engine.run(rc[:, None, :])["spikes"])[:, 0]
+    np.testing.assert_array_equal(c.result()["spikes"], want)
+
+
+# --------------------------------------------------------------------------
+# Backpressure policies
+# --------------------------------------------------------------------------
+
+def test_backpressure_reject(rng):
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    fe = AsyncSpikeFrontend(server, queue_capacity=1, backpressure="reject")
+    ra, rb = _rasters(rng, (4, 4), engine.n_inputs)
+    a = fe.submit(ra)
+    b = fe.submit(rb)
+    assert a.state == "queued" and b.state == "rejected"
+    assert b.result() is None and b.done
+    fe.drain()
+    assert a.state == "done"
+    assert fe.metrics()["counts"]["rejected"] == 1
+
+
+def test_backpressure_drop_oldest(rng):
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    fe = AsyncSpikeFrontend(server, queue_capacity=1,
+                            backpressure="drop-oldest")
+    ra, rb = _rasters(rng, (4, 4), engine.n_inputs)
+    a = fe.submit(ra)
+    b = fe.submit(rb)
+    assert a.state == "dropped" and b.state == "queued"
+    fe.drain()
+    assert b.state == "done"
+    counts = fe.metrics()["counts"]
+    assert counts["dropped"] == 1 and counts["done"] == 1
+
+
+def test_backpressure_block_pumps_until_space(rng):
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=4)
+    fe = AsyncSpikeFrontend(server, queue_capacity=1, backpressure="block")
+    ra, rb = _rasters(rng, (4, 4), engine.n_inputs)
+    a = fe.submit(ra)
+    b = fe.submit(rb)  # queue full: submit itself pumps the loop
+    assert b.state == "queued"
+    assert a.state in ("running", "done")  # progress was forced
+    fe.drain()
+    assert a.state == "done" and b.state == "done"
+    want = np.asarray(engine.run(rb[:, None, :])["spikes"])[:, 0]
+    np.testing.assert_array_equal(b.result()["spikes"], want)
+
+
+def test_constructor_validation(rng):
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1)
+    with pytest.raises(ValueError, match="backpressure"):
+        AsyncSpikeFrontend(server, backpressure="explode")
+    with pytest.raises(ValueError, match="queue_capacity"):
+        AsyncSpikeFrontend(server, queue_capacity=0)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        AsyncSpikeFrontend(server, deadline_ms=0)
+    fe = AsyncSpikeFrontend(server)
+    with pytest.raises(ValueError, match="chunk must be"):
+        fe.submit(np.zeros((3, engine.n_inputs + 1), np.int32))
+    with pytest.raises(ValueError, match="at least 1 timestep"):
+        fe.submit(np.zeros((0, engine.n_inputs), np.int32))
+
+
+# --------------------------------------------------------------------------
+# Determinism: admission order + slot assignment from the op sequence
+# --------------------------------------------------------------------------
+
+def _run_scenario(engine, lengths, cancel_at, n_slots, chunk_steps,
+                  capacity, policy):
+    """One full frontend run; returns the observable trace: per-round
+    (admitted rid -> slot) plus every request's terminal state + bytes."""
+    rng = np.random.default_rng(7)
+    rasters = _rasters(rng, lengths, engine.n_inputs)
+    server = SpikeServer(engine, n_slots=n_slots, chunk_steps=chunk_steps)
+    fe = AsyncSpikeFrontend(server, queue_capacity=capacity,
+                            backpressure=policy)
+    handles, trace = [], []
+    for i, r in enumerate(rasters):
+        handles.append(fe.submit(r))
+        if i in cancel_at:
+            handles[-1].cancel()
+    rid_of_uid = {}
+    while not fe.idle:
+        fe.pump()
+        for h in handles:
+            uid = h._req.uid
+            if uid is not None and uid not in rid_of_uid:
+                rid_of_uid[uid] = h.rid
+        trace.append(sorted((rid_of_uid[u], s)
+                            for u, s in server.scheduler.active.items()))
+    states = [h.state for h in handles]
+    bytes_out = [None if h.result() is None
+                 else h.result()["spikes"].tobytes() for h in handles]
+    return trace, states, bytes_out
+
+
+def test_admission_determinism_deterministic_companion(rng):
+    engine = _engine(rng)
+    kw = dict(lengths=(5, 3, 7, 2, 6), cancel_at={2}, n_slots=2,
+              chunk_steps=3, capacity=3, policy="drop-oldest")
+    assert (_run_scenario(engine, **kw) == _run_scenario(engine, **kw))
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**32 - 1),
+    n_slots=st.integers(1, 3),
+    chunk_steps=st.integers(1, 4),
+    capacity=st.integers(1, 5),
+    policy=st.sampled_from(("reject", "drop-oldest")),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_admission_determinism_property(seed, n_slots, chunk_steps,
+                                        capacity, policy):
+    """Admission order and slot assignment are a pure function of the
+    submit/cancel/pump sequence — replaying it reproduces the identical
+    trace and identical output bytes."""
+    rng = np.random.default_rng(seed)
+    engine = _engine(np.random.default_rng(0))
+    lengths = tuple(int(t) for t in rng.integers(1, 8, rng.integers(1, 7)))
+    cancel_at = set(rng.integers(0, len(lengths),
+                                 rng.integers(0, len(lengths))).tolist())
+    kw = dict(lengths=lengths, cancel_at=cancel_at, n_slots=n_slots,
+              chunk_steps=chunk_steps, capacity=capacity, policy=policy)
+    assert (_run_scenario(engine, **kw) == _run_scenario(engine, **kw))
+
+
+# --------------------------------------------------------------------------
+# AER requests + session wiring
+# --------------------------------------------------------------------------
+
+def test_submit_events_round_trip(rng):
+    from repro.events.aer import dense_to_aer
+
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=2, chunk_steps=3)
+    fe = AsyncSpikeFrontend(server)
+    raster = _rasters(rng, (6,), engine.n_inputs)[0]
+    stream = dense_to_aer(raster[:, None, :], capacity=raster.sum())
+    h = fe.submit_events(stream, events_capacity=256)
+    fe.drain()
+    want = engine.run(raster[:, None, :])["spikes"]
+    res = h.result()
+    np.testing.assert_array_equal(res["spikes"], np.asarray(want)[:, 0])
+    got_events = np.asarray(res["events"].addrs[:len(res["events"])])
+    from repro.events.aer import aer_to_dense
+    np.testing.assert_array_equal(
+        np.asarray(aer_to_dense(res["events"]))[:, 0], res["spikes"])
+    assert got_events.shape[1] == 3
+
+
+def test_session_serve_frontend_shared_and_bit_identical(rng):
+    """Co-resident views share ONE frontend queue, and async view results
+    are byte-identical to synchronous view feeds of the same rasters."""
+    def build():
+        sess = AcceleratorSession()
+        r = np.random.default_rng(3)
+        sess.deploy("a", make_random_net(r))
+        sess.deploy("b", make_random_net(r))
+        return sess
+
+    cfg = FrontendConfig(queue_capacity=8)
+    sess = build()
+    va = sess.serve("a", n_slots=2, chunk_steps=3, frontend=cfg)
+    vb = sess.serve("b", n_slots=2, chunk_steps=3, frontend=cfg)
+    assert va.frontend is vb.frontend is not None
+    # a view served later without frontend= still sees the group's queue
+    assert sess.serve("a", n_slots=2, chunk_steps=3).frontend is va.frontend
+    with pytest.raises(ValueError, match="one request queue"):
+        sess.serve("a", n_slots=2, chunk_steps=3,
+                   frontend=FrontendConfig(queue_capacity=9))
+
+    r = np.random.default_rng(11)
+    chunk_a = (r.random((7, va.n_inputs)) < 0.4).astype(np.int32)
+    chunk_b = (r.random((5, vb.n_inputs)) < 0.4).astype(np.int32)
+    ha = va.submit(chunk_a)
+    hb = vb.submit(chunk_b)
+    va.frontend.drain()
+
+    sync = build()
+    for view, chunk, h in ((sync.serve("a", n_slots=2, chunk_steps=3),
+                            chunk_a, ha),
+                           (sync.serve("b", n_slots=2, chunk_steps=3),
+                            chunk_b, hb)):
+        uid = view.attach()
+        want = view.feed(uid, chunk)
+        got = h.result()
+        np.testing.assert_array_equal(got["spikes"], want["spikes"])
+        np.testing.assert_array_equal(got["output_counts"],
+                                      want["output_counts"])
+        assert got["predictions"] == want["predictions"]
+
+
+def test_model_stream_submit_requires_frontend(rng):
+    sess = AcceleratorSession()
+    sess.deploy("m", make_random_net(np.random.default_rng(0)))
+    view = sess.serve("m")
+    with pytest.raises(RuntimeError, match="no async frontend"):
+        view.submit(np.zeros((3, view.n_inputs), np.int32))
+
+
+def test_latency_percentiles_shapes():
+    assert latency_percentiles([])["p50"] is None
+    p = latency_percentiles([1.0, 2.0, 3.0])
+    assert p["p50"] == 2.0 and p["max"] == 3.0

@@ -310,3 +310,29 @@ def test_session_streaming_churn_sharded_parity(rng):
         for k in ("spikes", "output_counts", "predictions"):
             np.testing.assert_array_equal(np.asarray(o_plain[k]),
                                           np.asarray(o_mesh[k]))
+
+
+def _async_frontend_parity(rng, mesh):
+    """Requests served through an AsyncSpikeFrontend over a SHARDED
+    server are byte-identical to the single-device engine's one-shot
+    run — the async front door composes with the mesh unchanged."""
+    from repro.serving.frontend import AsyncSpikeFrontend
+
+    single, sharded = _engine_pair(rng, mesh=mesh)
+    rasters = [(rng.random((T, single.n_inputs)) < 0.35).astype(np.int32)
+               for T in (7, 4, 9, 2)]
+    server = SpikeServer(sharded, n_slots=2, chunk_steps=3)
+    fe = AsyncSpikeFrontend(server, queue_capacity=len(rasters))
+    handles = [fe.submit(r) for r in rasters]
+    assert fe.drain()["counts"]["done"] == len(rasters)
+    for h, r in zip(handles, rasters):
+        want = np.asarray(single.run(r[:, None, :])["spikes"])[:, 0]
+        np.testing.assert_array_equal(h.result()["spikes"], want)
+
+
+def test_async_frontend_degenerate_mesh_parity(rng):
+    _async_frontend_parity(rng, make_spike_mesh(neuron=1, batch=1))
+
+
+def test_async_frontend_sharded_parity(rng):
+    _async_frontend_parity(rng, _mesh(2, 2))
