@@ -26,6 +26,27 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 # once, then every emit() with structured **fields is also appended to an
 # in-memory record list that write_json() dumps as a BENCH_*.json — the
 # repo's perf trajectory across PRs.
+#
+# SCHEMA_VERSION history (stamped into every document's metadata):
+#   1  implicit axes: records carried only the fields their bench passed,
+#      so consumers had to existence-check every axis (a record with the
+#      default gate simply had no "gate" key).
+#   2  every record carries ALL of AXIS_DEFAULTS unconditionally — absent
+#      axes are filled with their defaults at emit() time, so grouping by
+#      (backend, gate, batch, devices, fuse_steps) never KeyErrors.
+SCHEMA_VERSION = 2
+
+# The cross-bench axes and the value a record has when its bench did not
+# set one ("gate": None = not an engine record / gate not applicable;
+# "devices": 1 = single device; "fuse_steps": 1 = unfused kernels).
+AXIS_DEFAULTS: dict = {
+    "backend": None,
+    "gate": None,
+    "batch": None,
+    "devices": 1,
+    "fuse_steps": 1,
+}
+
 _records: list[dict] | None = None
 
 
@@ -39,6 +60,7 @@ def write_json(path: str, **metadata) -> None:
         raise RuntimeError("write_json() without start_recording()")
     doc = {
         "metadata": {
+            "schema": SCHEMA_VERSION,
             "backend_platform": jax.default_backend(),
             "device_count": jax.device_count(),
             "jax_version": jax.__version__,
@@ -67,6 +89,11 @@ def emit(name: str, us_per_call: float | None, derived: str,
     if _records is not None:
         per_timestep = fields.pop("per_timestep", False)  # directive, not data
         rec = {"name": name, "info": derived, **fields}
+        # schema >= 2: every record carries every cross-bench axis, so a
+        # default (e.g. the default gate) is an explicit value, never a
+        # missing key
+        for axis, default in AXIS_DEFAULTS.items():
+            rec.setdefault(axis, default)
         if us_per_call is not None:
             rec["us_per_call"] = round(us_per_call, 3)
             if per_timestep:

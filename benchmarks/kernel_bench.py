@@ -24,9 +24,17 @@ queue driven open-loop at under/overload on a virtual clock — outcome
 counts (done/rejected/dropped/expired), queue depth, and queue-wait vs
 service percentiles per backpressure policy (BENCH_pr5.json).
 
+``--fuse-steps K1,K2,...`` adds the K-step fusion axis (BENCH_pr6.json):
+engine-scan steps/s and weight-block traffic per K x backend x sparsity x
+serving occupancy. Traffic is counted twice and cross-checked — the
+kernel-side gate scalars (``ops.ext_gate_activity``, the DMAs the fused
+kernel actually issues) against the ``events.trace`` window-OR model —
+so the ~1/K per-step traffic claim is measured, not estimated.
+
 ``--json out.json`` writes all results as machine-readable records per
-(backend, batch, occupancy, sparsity, gate, devices) — the repo's
-``BENCH_*.json`` perf trajectory.
+(backend, batch, occupancy, sparsity, gate, devices, fuse_steps) — the
+repo's ``BENCH_*.json`` perf trajectory (schema versioned in
+``benchmarks/common.py``; every record carries every axis).
 """
 
 from __future__ import annotations
@@ -39,7 +47,8 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit, time_call
-from repro.core.engine import BACKENDS, GATES, DecaySpec, SpikeEngine
+from repro.core.engine import (BACKENDS, GATES, DecaySpec, SpikeEngine,
+                               sources_raster)
 from repro.distributed.spike_mesh import (ensure_host_devices,
                                           make_spike_mesh, parse_mesh_spec)
 from repro.events import trace
@@ -72,8 +81,9 @@ def bench_engine_backends(backends, *, batch: int, activity: float,
         emit(f"engine/timestep_{backend}_d{devices}", per_step,
              f"us/timestep B={batch} S={n_in + P} P={P} "
              f"activity={activity} T={steps} devices={devices}",
-             kind="engine_scan", backend=backend, batch=batch,
-             activity=activity, devices=devices, per_timestep=True)
+             kind="engine_scan", backend=backend, gate=engine.gate,
+             batch=batch, activity=activity, devices=devices,
+             per_timestep=True)
 
 
 def bench_streaming(backends, *, n_slots: int, activity: float,
@@ -102,8 +112,9 @@ def bench_streaming(backends, *, n_slots: int, activity: float,
         emit(f"streaming/batch_scan_{backend}_d{devices}", t_batch / T,
              f"us/timestep B={n_slots} T={T} devices={devices} "
              f"(one-shot run)",
-             kind="streaming_batch_scan", backend=backend, batch=n_slots,
-             activity=activity, devices=devices, per_timestep=True)
+             kind="streaming_batch_scan", backend=backend,
+             gate=engine.gate, batch=n_slots, activity=activity,
+             devices=devices, per_timestep=True)
 
         for occupancy in (1.0, 0.25):
             n_live = max(1, int(round(occupancy * n_slots)))
@@ -123,9 +134,9 @@ def bench_streaming(backends, *, n_slots: int, activity: float,
                  f"us/timestep {n_live}/{n_slots} slots live, "
                  f"chunk={chunk_steps} devices={devices} "
                  f"(masked step, per-chunk host hop)",
-                 kind="streaming_feed", backend=backend, batch=n_slots,
-                 occupancy=occupancy, activity=activity, devices=devices,
-                 per_timestep=True)
+                 kind="streaming_feed", backend=backend, gate=engine.gate,
+                 batch=n_slots, occupancy=occupancy, activity=activity,
+                 devices=devices, per_timestep=True)
 
 
 def bench_event_gating(backends, sparsities, *, batch: int,
@@ -199,6 +210,96 @@ def bench_event_gating(backends, sparsities, *, batch: int,
                      n_slots=n_slots, blocks_touched=touched,
                      blocks_total=total,
                      traffic_ratio=round(srep.traffic_ratio(gate), 4))
+
+
+def bench_fuse_steps(backends, fuse_list, sparsities, *, batch: int,
+                     n_slots: int = 8, steps: int = 8) -> None:
+    """The K-step fusion axis: per-step weight traffic shrinking ~1/K.
+
+    For each sparsity level this records (a) the fused kernel's
+    weight-block traffic per K from the ``events.trace`` window-OR model,
+    CROSS-CHECKED against the gate scalars the kernel actually DMAs by
+    (``ops.ext_gate_activity`` — the two counters must agree exactly, or
+    this bench raises), (b) engine-scan time per backend x K (the
+    reference backend has no fused path — ``SpikeEngine`` carries K but
+    executes per step — so it is timed once at K=1 as the baseline), and
+    (c) the serving occupancy regime: fused per-example (tile_batch=1)
+    traffic on a slot batch with idle slots.
+    """
+    from repro.kernels import ops  # deferred: see NOTE at module top
+
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    ref_engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero")
+    for sparsity in sparsities:
+        ext = jnp.asarray(
+            rng.random((steps, batch, n_in)) < sparsity, jnp.int32)
+        out = ref_engine.run(ext)["spikes"]
+        sources = np.asarray(sources_raster(ext, out))
+        for K in fuse_list:
+            touched, total = trace.fused_block_traffic(
+                sources, n_in, fuse_steps=K)
+            # counter cross-check: the trace model's window-OR count of
+            # EXT blocks must equal the number of nonzero gate scalars
+            # the fused kernel schedules DMAs from
+            ext_trace = trace.block_traffic(
+                np.asarray(ext), fuse_steps=K)[0]
+            ext_kernel = int(
+                (np.asarray(ops.ext_gate_activity(ext, fuse_steps=K))
+                 > 0).sum())
+            if ext_kernel != ext_trace:
+                raise AssertionError(
+                    f"fused traffic counters disagree at K={K}: kernel "
+                    f"gate scalars say {ext_kernel} ext-block DMAs, "
+                    f"trace window-OR says {ext_trace}")
+            emit(f"fusion/traffic_K{K}_s{sparsity:g}", None,
+                 f"{touched}/{total} weight blocks "
+                 f"({100 * touched / max(total, 1):.1f}% of per-step "
+                 f"dense), {ext_kernel} gated ext DMAs "
+                 f"(counter-checked), B={batch} T={steps}",
+                 kind="fusion_traffic", fuse_steps=K, sparsity=sparsity,
+                 batch=batch, blocks_touched=touched, blocks_total=total,
+                 traffic_ratio=round(touched / max(total, 1), 4),
+                 ext_gate_dmas=ext_kernel, counter_consistent=True)
+        for backend in backends:
+            for K in (fuse_list if backend != "reference" else [1]):
+                engine = SpikeEngine(
+                    W, n_in, decay=DecaySpec.shift(0.25),
+                    threshold_raw=1 << 16, reset_mode="zero",
+                    backend=backend, fuse_steps=K)
+                t = time_call(lambda e=engine: e.run(ext)["spikes"])
+                emit(f"fusion/timestep_{backend}_K{K}_s{sparsity:g}",
+                     t / steps,
+                     f"us/timestep B={batch} sparsity={sparsity} K={K} "
+                     f"gate={engine.gate}",
+                     kind="fusion_time", backend=backend, fuse_steps=K,
+                     gate=engine.gate, sparsity=sparsity, batch=batch,
+                     per_timestep=True)
+        # serving occupancy: idle slots under the per-example fused gate
+        # (tile_batch=1 — a silent slot's ext blocks never DMA)
+        for occupancy in (1.0, 0.25):
+            n_live = max(1, int(round(occupancy * n_slots)))
+            slot_ext = np.zeros((steps, n_slots, n_in), np.int32)
+            slot_ext[:, :n_live] = np.asarray(
+                rng.random((steps, n_live, n_in)) < sparsity, np.int32)
+            slot_out = ref_engine.run(jnp.asarray(slot_ext))["spikes"]
+            slot_src = np.asarray(sources_raster(slot_ext, slot_out))
+            for K in fuse_list:
+                touched, total = trace.fused_block_traffic(
+                    slot_src, n_in, fuse_steps=K, tile_batch=1)
+                emit(f"fusion/serving_K{K}_occ{occupancy:g}"
+                     f"_s{sparsity:g}", None,
+                     f"{n_live}/{n_slots} slots live: {touched}/{total} "
+                     f"weight blocks "
+                     f"({100 * touched / max(total, 1):.1f}% of per-step "
+                     f"dense)",
+                     kind="fusion_serving", fuse_steps=K,
+                     gate="per-example", occupancy=occupancy,
+                     sparsity=sparsity, n_slots=n_slots,
+                     blocks_touched=touched, blocks_total=total,
+                     traffic_ratio=round(touched / max(total, 1), 4))
 
 
 def bench_async_frontend(backends, *, n_slots: int = 8,
@@ -294,6 +395,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "event-gating sweep: gated-vs-dense weight "
                          "traffic / SOP reduction per gate x backend x "
                          "serving occupancy (e.g. 0.02,0.05,0.2)")
+    ap.add_argument("--fuse-steps", default=None, metavar="K1,K2,...",
+                    help="comma list of K values for the K-step fusion "
+                         "sweep: engine steps/s and weight-block traffic "
+                         "per K x backend x sparsity x occupancy, with "
+                         "the trace window-OR count cross-checked "
+                         "against the kernel's gate scalars (e.g. 1,4,8)")
     ap.add_argument("--devices", type=int, default=1,
                     help="also run the engine/streaming benches on a mesh "
                          "over N devices (faked host devices on CPU)")
@@ -331,6 +438,7 @@ def main(argv=None) -> None:
         print(f"[bench] mesh axis: {kn} neuron shards x {kb} batch shards "
               f"({args.devices} devices)", flush=True)
 
+    sparsities = None
     if args.sparsity:
         try:
             sparsities = [float(s) for s in args.sparsity.split(",") if s]
@@ -340,6 +448,20 @@ def main(argv=None) -> None:
                 f"got {args.sparsity!r}")
         bench_event_gating(backends, sparsities, batch=args.batch,
                            n_slots=max(args.batch, 8))
+
+    if args.fuse_steps:
+        try:
+            fuse_list = [int(k) for k in args.fuse_steps.split(",") if k]
+        except ValueError:
+            raise SystemExit(
+                f"--fuse-steps must be comma-separated ints, "
+                f"got {args.fuse_steps!r}")
+        if not fuse_list or any(k < 1 for k in fuse_list):
+            raise SystemExit(
+                f"--fuse-steps values must be >= 1, got {args.fuse_steps!r}")
+        bench_fuse_steps(backends, fuse_list,
+                         sparsities if sparsities else [args.activity],
+                         batch=args.batch, n_slots=max(args.batch, 8))
 
     bench_engine_backends(backends, batch=args.batch,
                           activity=args.activity)
@@ -412,6 +534,7 @@ def main(argv=None) -> None:
             args={"batch": args.batch, "activity": args.activity,
                   "backend": args.backend, "streaming": args.streaming,
                   "async": args.async_mode, "sparsity": args.sparsity,
+                  "fuse_steps": args.fuse_steps,
                   "devices": args.devices, "mesh": args.mesh},
         )
 

@@ -111,14 +111,24 @@ class DecaySpec:
 
 
 def mxu_partial_sum_bound(weights_raw: np.ndarray,
-                          block_src: int = _MXU_BLOCK_SRC) -> int:
+                          block_src: int = _MXU_BLOCK_SRC, *,
+                          fuse_steps: int = 1) -> int:
     """Worst-case f32 partial-sum magnitude of the MXU accumulate.
 
-    The kernel reduces over source blocks of ``block_src`` rows; sources
+    Both kernels reduce over source blocks of ``block_src`` rows; sources
     are {0,1}, so the worst case for an output column is the sum of |w|
     over one block. Inter-block accumulation happens in int32 and is
     always exact, so only the intra-block bound matters.
+
+    ``fuse_steps`` is accepted so callers state the K they validate for:
+    the bound is K-INVARIANT by construction. The K-step fused kernel
+    stacks the window along the dot's BATCH axis (K*Bb rows of {0,1}
+    sources against one block), and its per-step recurrent accumulate is
+    chunked at ``block_src`` rows with int32 inter-chunk adds — no f32
+    reduction ever spans more than one ``block_src`` block, for any K.
     """
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
     w = np.abs(np.asarray(weights_raw, np.int64))
     S = w.shape[0]
     pad = (-S) % block_src
@@ -166,6 +176,7 @@ class SpikeEngine:
         backend: str = "reference",
         interpret: bool | None = None,
         gate: str = "batch-tile",
+        fuse_steps: int = 1,
     ):
         if backend not in BACKENDS:
             raise ValueError(
@@ -175,6 +186,9 @@ class SpikeEngine:
             raise ValueError(
                 f"unknown event gate {gate!r}; expected one of {GATES}"
             )
+        fuse_steps = int(fuse_steps)
+        if fuse_steps < 1:
+            raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
         weights_raw = jnp.asarray(weights_raw, jnp.int32)
         if weights_raw.ndim != 2:
             raise ValueError(
@@ -192,14 +206,21 @@ class SpikeEngine:
                 f"n_phys {n_phys}: recurrent spikes could not be fed back"
             )
         if backend == "pallas-mxu":
-            worst = mxu_partial_sum_bound(np.asarray(weights_raw))
+            worst = mxu_partial_sum_bound(np.asarray(weights_raw),
+                                          fuse_steps=fuse_steps)
             if worst >= MXU_EXACT_BOUND:
+                w_max = int(np.abs(np.asarray(weights_raw)).max())
                 raise ValueError(
                     f"pallas-mxu backend rejected at compile time: "
                     f"worst-case f32 partial sum {worst} >= 2^24 "
-                    f"({MXU_EXACT_BOUND}); the MXU accumulate would not be "
-                    f"bit-exact for this weight image. Reduce fan-in or "
-                    f"weight magnitudes, or use backend='pallas'."
+                    f"({MXU_EXACT_BOUND}) for max |w| = {w_max} raw Q16.16, "
+                    f"per-block source fan-in {_MXU_BLOCK_SRC}, "
+                    f"fuse_steps K = {fuse_steps} (the bound is "
+                    f"K-invariant: the fused window stacks along the dot's "
+                    f"batch axis, never its reduction axis); the MXU "
+                    f"accumulate would not be bit-exact for this weight "
+                    f"image. Reduce fan-in or weight magnitudes, or use "
+                    f"backend='pallas'."
                 )
         self.weights_raw = weights_raw
         self.n_inputs = int(n_inputs)
@@ -211,6 +232,11 @@ class SpikeEngine:
         self.backend = backend
         self.interpret = interpret
         self.gate = gate
+        # K timesteps per kernel invocation (the fused Pallas window);
+        # part of the engine identity, so the lazily-built jit caches
+        # below are keyed by it structurally — one compiled program per
+        # (engine, K). fuse_steps == 1 keeps the single-step kernels.
+        self.fuse_steps = fuse_steps
         self._run_jit = None  # compiled scan, built lazily once per engine
         self._chunk_jit = None  # compiled masked chunk step (streaming path)
 
@@ -242,6 +268,20 @@ class SpikeEngine:
             self.weights_raw, self.n_inputs, decay=self.decay,
             threshold_raw=self.threshold_raw, reset_mode=self.reset_mode,
             backend=self.backend, interpret=self.interpret, gate=gate,
+            fuse_steps=self.fuse_steps,
+        )
+
+    def with_fuse_steps(self, fuse_steps: int) -> "SpikeEngine":
+        """This engine's program re-hosted under another K-step fusion
+        window (bit-identical outputs; only kernel granularity and weight
+        traffic differ). Returns ``self`` when K already matches."""
+        if int(fuse_steps) == self.fuse_steps:
+            return self
+        return SpikeEngine(
+            self.weights_raw, self.n_inputs, decay=self.decay,
+            threshold_raw=self.threshold_raw, reset_mode=self.reset_mode,
+            backend=self.backend, interpret=self.interpret, gate=self.gate,
+            fuse_steps=fuse_steps,
         )
 
     # ------------------------------------------------------------------
@@ -331,7 +371,55 @@ class SpikeEngine:
 
         return jax.lax.scan(body, carry, (ext, active))
 
+    # ------------------------------------------------------------------
+    # K-step fused path: with fuse_steps > 1 on a Pallas backend, run /
+    # step_chunk scan over K-step WINDOWS, each one fused kernel call
+    # (weight blocks fetched once per window instead of once per step).
+    # A ragged T pads up to a K multiple with active = 0 — the kernel's
+    # in-body masked-slot contract makes the remainder byte-identical to
+    # the unfused masked scan, so no separate remainder program exists.
+    # ------------------------------------------------------------------
+    @property
+    def _use_fused(self) -> bool:
+        return self.fuse_steps > 1 and self.backend != "reference"
+
+    def _window(self, weights, carry, ext_w, act_w):
+        """One fused K-step window: (carry, (K,B,*) inputs) -> (carry',
+        (K,B,P) emitted raster)."""
+        from repro.kernels import ops  # deferred: breaks import cycle
+
+        v_out, spk_carry, raster = ops.spike_timestep_fused(
+            ext_w, carry["spikes"], weights, carry["v"], act_w,
+            n_inputs=self.n_inputs,
+            decay_kind=self.decay.kind,
+            decay_rate=self.decay.rate,
+            decay_raw=self.decay.raw,
+            threshold_raw=self.threshold_raw,
+            reset_mode=self.reset_mode,
+            use_mxu=(self.backend == "pallas-mxu"),
+            block_batch=(1 if self.gate == "per-example"
+                         else _GATE_TILE_BATCH),
+            interpret=self.interpret,
+        )
+        return {"v": v_out, "spikes": spk_carry}, raster
+
+    def _fused_scan(self, weights, carry, ext, active):
+        K = self.fuse_steps
+        T, B = ext.shape[0], ext.shape[1]
+        pad = (-T) % K
+        if pad:
+            ext = jnp.pad(ext, ((0, pad), (0, 0), (0, 0)))
+            active = jnp.pad(active, ((0, pad), (0, 0)))
+        nw = (T + pad) // K
+        ext_w = ext.reshape(nw, K, B, self.n_inputs)
+        act_w = active.reshape(nw, K, B)
+        body = lambda c, xs: self._window(weights, c, xs[0], xs[1])
+        final, raster = jax.lax.scan(body, carry, (ext_w, act_w))
+        return final, raster.reshape(nw * K, B, self.n_phys)[:T]
+
     def _chunk_impl(self, weights, carry, ext, active):
+        if self._use_fused:
+            return self._fused_scan(weights, carry, ext, active)
         step = lambda c, x: self._step(weights, c, x)
         return self._masked_chunk_scan(step, carry, ext, active)
 
@@ -372,8 +460,13 @@ class SpikeEngine:
     # ------------------------------------------------------------------
     def _run_impl(self, weights, ext_spikes):
         carry = self.init_carry(ext_spikes.shape[1])
-        step = lambda c, x: self._step(weights, c, x)
-        final, spikes = jax.lax.scan(step, carry, ext_spikes)
+        if self._use_fused:
+            active = jnp.ones(ext_spikes.shape[:2], jnp.int32)
+            final, spikes = self._fused_scan(
+                weights, carry, ext_spikes, active)
+        else:
+            step = lambda c, x: self._step(weights, c, x)
+            final, spikes = jax.lax.scan(step, carry, ext_spikes)
         return {"spikes": spikes, "v_final": final["v"]}
 
     def run(self, ext_spikes, *, events_capacity: int | None = None,
@@ -395,7 +488,9 @@ class SpikeEngine:
 
         Exactness: every backend returns bit-identical rasters (the
         pallas-mxu 2^24 bound is enforced at engine build, so an engine
-        that constructs cannot mis-accumulate), under any ``gate``.
+        that constructs cannot mis-accumulate), under any ``gate`` and
+        any ``fuse_steps`` (the K-step fused window applies the same
+        int32 accumulate + LIF epilogue per step inside the kernel).
         Static shapes: the whole scan is jitted once per engine and
         reused across calls; one XLA program serves every call of the
         same ``(T, B)`` shape (AER inputs decode through one jitted op at

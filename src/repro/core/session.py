@@ -56,10 +56,15 @@ class AcceleratorSession:
     """
 
     def __init__(self, config: cerebra_h.CerebraHConfig | None = None,
-                 backend: str = "reference", mesh=None):
+                 backend: str = "reference", mesh=None,
+                 fuse_steps: int = 1):
         self.config = config or cerebra_h.CerebraHConfig()
         self.backend = backend
         self.mesh = mesh
+        # K timesteps per fused kernel window for every engine this
+        # session builds (1 = single-step kernels); outputs are
+        # byte-identical for any K, only weight traffic changes.
+        self.fuse_steps = int(fuse_steps)
         self.models: dict[str, DeployedModel] = {}
         self._next_cluster = 0
         self._next_input = 0
@@ -153,7 +158,8 @@ class AcceleratorSession:
         IS the union SRAM image the hardware holds.
         """
         sig = self._lif_signature(members[0].program)
-        key = (tuple(m.name for m in members), sig, self.backend, self.mesh)
+        key = (tuple(m.name for m in members), sig, self.backend, self.mesh,
+               self.fuse_steps)
         engine = self._fused_engines.get(key)
         if engine is not None:
             return engine
@@ -176,6 +182,7 @@ class AcceleratorSession:
             threshold_raw=threshold_raw,
             reset_mode=reset_mode,
             backend=self.backend,
+            fuse_steps=self.fuse_steps,
         )
         if self.mesh is not None:
             engine = engine.to_mesh(self.mesh)
@@ -278,7 +285,8 @@ class AcceleratorSession:
         sig = self._lif_signature(model.program)
         group = [m for m in self.models.values()
                  if self._lif_signature(m.program) == sig]
-        group_key = (tuple(m.name for m in group), sig, self.backend)
+        group_key = (tuple(m.name for m in group), sig, self.backend,
+                     self.fuse_steps)
         # normalize gate=None to the engine's effective gate so a default
         # serve and an explicit-default serve alias to ONE server key
         gate = gate if gate is not None else self._fused_engine(group).gate
@@ -288,11 +296,12 @@ class AcceleratorSession:
             # one server per group: mismatched slot parameters would
             # silently split co-resident streams into independent carries
             for other in self._stream_servers:
-                if other[:3] == group_key:
+                if other[: len(group_key)] == group_key:
+                    n_slots_o, chunk_o, gate_o = other[len(group_key):]
                     raise ValueError(
                         f"group {group_key[0]} is already served with "
-                        f"n_slots={other[3]}, chunk_steps={other[4]}, "
-                        f"gate={other[5]}; co-resident views must share "
+                        f"n_slots={n_slots_o}, chunk_steps={chunk_o}, "
+                        f"gate={gate_o}; co-resident views must share "
                         f"one server"
                     )
             server = SpikeServer(self._fused_engine(group),

@@ -165,16 +165,23 @@ class MeshSpikeEngine(SpikeEngine):
     at all. Outputs, carries, and the ``step_chunk`` masked-slot semantics
     are byte-identical to the single-device engine (pinned by
     tests/test_spike_mesh.py).
+
+    ``fuse_steps`` is carried (and preserved by ``from_engine`` /
+    ``with_gate``, so to_mesh round-trips keep K), but the mesh scan
+    EXECUTES per step regardless: the cross-device boundary-spike exchange
+    is mandatory every timestep, so a K-step window cannot be fused across
+    the NoC. Outputs stay byte-identical to the fused single-device engine
+    by the fusion exactness contract.
     """
 
     def __init__(self, weights_raw, n_inputs: int, *, mesh: Mesh,
                  decay, threshold_raw: int, reset_mode: str,
                  backend: str = "reference", interpret: bool | None = None,
-                 gate: str = "batch-tile"):
+                 gate: str = "batch-tile", fuse_steps: int = 1):
         super().__init__(
             weights_raw, n_inputs, decay=decay, threshold_raw=threshold_raw,
             reset_mode=reset_mode, backend=backend, interpret=interpret,
-            gate=gate,
+            gate=gate, fuse_steps=fuse_steps,
         )
         missing = {NEURON_AXIS, BATCH_AXIS} - set(mesh.axis_names)
         if missing:
@@ -209,6 +216,7 @@ class MeshSpikeEngine(SpikeEngine):
             decay=engine.decay, threshold_raw=engine.threshold_raw,
             reset_mode=engine.reset_mode, backend=engine.backend,
             interpret=engine.interpret, gate=engine.gate,
+            fuse_steps=engine.fuse_steps,
         )
 
     def with_gate(self, gate: str) -> "MeshSpikeEngine":
@@ -221,6 +229,20 @@ class MeshSpikeEngine(SpikeEngine):
             decay=self.decay, threshold_raw=self.threshold_raw,
             reset_mode=self.reset_mode, backend=self.backend,
             interpret=self.interpret, gate=gate,
+            fuse_steps=self.fuse_steps,
+        )
+
+    def with_fuse_steps(self, fuse_steps: int) -> "MeshSpikeEngine":
+        """Fusion re-host that KEEPS the mesh (the base implementation
+        would silently fall back to a single-device engine)."""
+        if int(fuse_steps) == self.fuse_steps:
+            return self
+        return MeshSpikeEngine(
+            self.weights_raw, self.n_inputs, mesh=self.mesh,
+            decay=self.decay, threshold_raw=self.threshold_raw,
+            reset_mode=self.reset_mode, backend=self.backend,
+            interpret=self.interpret, gate=self.gate,
+            fuse_steps=fuse_steps,
         )
 
     @property

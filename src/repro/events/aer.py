@@ -22,8 +22,12 @@ Contracts:
   * **Binary events.** Dense rasters are binarized (any nonzero is one
     event); spike rasters in this repo are {0,1} already.
 
-Only ``jax`` is imported here — everything above (engine, serving, data)
-may depend on this module without cycles.
+Decoding routes through the u32-lane bitpacked raster form
+(:mod:`repro.kernels.bitpack`): events scatter as single BITS into packed
+lanes (:func:`aer_to_packed` — the kernel-side wire format), and the dense
+{0,1} raster is the unpack of that. Only ``jax`` and the leaf-level
+``repro.kernels.bitpack`` are imported here — everything above (engine,
+serving, data) may depend on this module without cycles.
 """
 
 from __future__ import annotations
@@ -34,7 +38,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AERStream", "dense_to_aer", "aer_to_dense"]
+from repro.kernels import bitpack
+
+__all__ = ["AERStream", "dense_to_aer", "aer_to_dense", "aer_to_packed"]
 
 
 @functools.partial(
@@ -122,15 +128,38 @@ def dense_to_aer(dense, capacity: int, *, policy: str = "error") -> AERStream:
 
 
 @functools.partial(jax.jit, static_argnames=("shape",))
-def _aer_to_dense(addrs, count, shape: tuple[int, int, int]):
-    # Rows past `count` (and -1 filler) must not scatter. mode='drop' only
-    # ignores OUT-OF-BOUNDS indices and negative indices still wrap, so
-    # invalid rows are redirected to a positive sentinel past every axis.
-    oob = jnp.int32(max(shape) if shape else 1)
-    valid = (jnp.arange(addrs.shape[0]) < count)[:, None] & (addrs >= 0)
-    idx = jnp.where(valid, addrs, oob)
-    dense = jnp.zeros(shape, jnp.int32)
-    return dense.at[idx[:, 0], idx[:, 1], idx[:, 2]].set(1, mode="drop")
+def _aer_to_packed(addrs, count, shape: tuple[int, int, int]):
+    # Each event scatters ONE BIT: value 1 << (source % 32) added into
+    # lane (t, slot, source // 32). Stored addresses are unique (rows come
+    # from jnp.nonzero), so add == bitwise-or. Rows past `count` (and -1
+    # filler) must not scatter: their value is zeroed AND their index is
+    # redirected to a positive sentinel past every axis (mode='drop' only
+    # ignores out-of-bounds indices; negative indices would wrap).
+    T, B, S = shape
+    lanes = bitpack.packed_lanes(S)
+    oob = jnp.int32(max(T, B, lanes, 1))
+    valid = ((jnp.arange(addrs.shape[0]) < count)[:, None]
+             & (addrs >= 0)).all(axis=1)
+    t = jnp.where(valid, addrs[:, 0], oob)
+    b = jnp.where(valid, addrs[:, 1], oob)
+    lane = jnp.where(valid, addrs[:, 2] // bitpack.LANE_BITS, oob)
+    bit = (addrs[:, 2] % bitpack.LANE_BITS).astype(jnp.uint32)
+    val = jnp.where(valid, jnp.uint32(1) << bit, jnp.uint32(0))
+    packed = jnp.zeros((T, B, lanes), jnp.uint32)
+    return packed.at[t, b, lane].add(val, mode="drop")
+
+
+def aer_to_packed(stream: AERStream) -> jnp.ndarray:
+    """Decode an AER stream to the bitpacked ``(T, B, lanes)`` uint32
+    raster (:mod:`repro.kernels.bitpack` lane layout: source ``s`` = lane
+    ``s // 32``, bit ``s % 32``).
+
+    This is the event path onto the kernel-side wire format: one jitted
+    scatter of single bits, no dense intermediate.
+    ``bitpack.count_spikes`` over the result equals the stream's stored
+    event count.
+    """
+    return _aer_to_packed(stream.addrs, stream.count, stream.shape)
 
 
 def aer_to_dense(stream: AERStream) -> jnp.ndarray:
@@ -138,6 +167,8 @@ def aer_to_dense(stream: AERStream) -> jnp.ndarray:
 
     Exact inverse of :func:`dense_to_aer` on binary rasters whenever the
     stream did not overflow; after a ``policy="drop"`` overflow it yields
-    the raster of the earliest ``capacity`` events.
+    the raster of the earliest ``capacity`` events. The decode goes
+    events -> packed lanes -> unpack, so the dense raster is by
+    construction the unpack of :func:`aer_to_packed`.
     """
-    return _aer_to_dense(stream.addrs, stream.count, stream.shape)
+    return bitpack.unpack_spikes(aer_to_packed(stream), stream.shape[2])

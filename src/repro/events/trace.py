@@ -34,6 +34,7 @@ from repro.events.aer import AERStream, aer_to_dense
 __all__ = [
     "SpikeTraceReport",
     "block_traffic",
+    "fused_block_traffic",
     "measured_counts",
     "trace_run",
 ]
@@ -46,27 +47,70 @@ def _as_dense(x) -> np.ndarray:
 
 
 def block_traffic(sources, *, block_src: int = 128,
-                  tile_batch: int = 8) -> tuple[int, int]:
+                  tile_batch: int = 8,
+                  fuse_steps: int = 1) -> tuple[int, int]:
     """Weight-block fetches the event gate performs on ``sources``.
 
     Args:
       sources: (T, B, S) source activity (external + boundary spikes).
       block_src: source rows per weight block (kernel ``block_src``).
       tile_batch: batch rows sharing one fetch (1 = per-example gate).
+      fuse_steps: timesteps per fused kernel window (K). Gate scalars are
+        ORed over each window — a block is fetched once per window iff ANY
+        of its K steps spikes on it — and the trailing ragged window pads
+        with silence, mirroring the engine's masked remainder.
     Returns:
-      ``(touched, total)`` block fetches: gated vs dense for this tiling.
+      ``(touched, total)`` block fetches: gated vs dense for this tiling,
+      at one fetch per (window, batch tile, source block).
+    """
+    src = _as_dense(sources)
+    if src.ndim != 3:
+        raise ValueError(f"sources must be (T, B, S), got {src.shape}")
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
+    T, B, S = src.shape
+    nw = -(-T // fuse_steps)
+    nb = -(-B // tile_batch)
+    ns = -(-S // block_src)
+    padded = np.zeros(
+        (nw * fuse_steps, nb * tile_batch, ns * block_src), bool)
+    padded[:T, :B, :S] = src != 0
+    tiles = padded.reshape(nw, fuse_steps, nb, tile_batch, ns, block_src)
+    touched = int(tiles.any(axis=(1, 3, 5)).sum())
+    return touched, nw * nb * ns
+
+
+def fused_block_traffic(sources, n_inputs: int, *, block_src: int = 128,
+                        tile_batch: int = 8,
+                        fuse_steps: int = 1) -> tuple[int, int]:
+    """Weight-block fetches of the K-STEP FUSED kernel on ``sources``.
+
+    The fused datapath splits the image at ``n_inputs``: EXTERNAL blocks
+    are gated on window-OR activity and DMA'd once per active (window,
+    batch tile, block); the RECURRENT image cannot be gated ahead of the
+    in-window feedback, so ALL its blocks are fetched once per (window,
+    batch tile) and held VMEM-resident. Returns ``(touched, total)``
+    where ``total`` is the single-step dense baseline ``T * tiles *
+    blocks`` — so ``touched / total`` is directly the fraction of
+    per-step dense traffic the fused kernel moves (~1/K at dense
+    activity; less when the external gate bites).
     """
     src = _as_dense(sources)
     if src.ndim != 3:
         raise ValueError(f"sources must be (T, B, S), got {src.shape}")
     T, B, S = src.shape
+    if not 0 <= n_inputs <= S:
+        raise ValueError(f"n_inputs={n_inputs} outside [0, {S}]")
+    nw = -(-T // fuse_steps)
     nb = -(-B // tile_batch)
-    ns = -(-S // block_src)
-    padded = np.zeros((T, nb * tile_batch, ns * block_src), bool)
-    padded[:, :B, :S] = src != 0
-    tiles = padded.reshape(T, nb, tile_batch, ns, block_src)
-    touched = int(tiles.any(axis=(2, 4)).sum())
-    return touched, T * nb * ns
+    ns_ext = -(-n_inputs // block_src)
+    ns_rec = -(-(S - n_inputs) // block_src)
+    ext_touched, _ = block_traffic(
+        src[:, :, :n_inputs], block_src=block_src, tile_batch=tile_batch,
+        fuse_steps=fuse_steps) if n_inputs else (0, 0)
+    rec_touched = nw * nb * ns_rec
+    total = T * nb * (ns_ext + ns_rec)
+    return ext_touched + rec_touched, total
 
 
 @dataclasses.dataclass(frozen=True)

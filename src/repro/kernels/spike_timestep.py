@@ -39,7 +39,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.epilogue import decay_and_fire, validate_decay
 
-__all__ = ["spike_timestep_kernel", "build_spike_timestep"]
+__all__ = [
+    "spike_timestep_kernel",
+    "build_spike_timestep",
+    "spike_timestep_fused_kernel",
+    "build_spike_timestep_fused",
+]
 
 
 def spike_timestep_kernel(
@@ -163,6 +168,289 @@ def build_spike_timestep(
         out_shape=[
             jax.ShapeDtypeStruct((batch, n_phys), jnp.int32),
             jax.ShapeDtypeStruct((batch, n_phys), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+
+
+# ==========================================================================
+# K-step fused variant: bitpacked sources + double-buffered gated weight DMA
+# ==========================================================================
+#
+# Recurrent feedback splits the weight image's fusion behaviour in two.
+# Spikes of step t feed step t+1, so the RECURRENT rows (W_rec, the last
+# n_phys rows) cannot be gated ahead of time — but they CAN be fetched once
+# per K-step window and kept VMEM-resident while an in-kernel loop applies
+# them per step. The EXTERNAL rows (W_ext, the first n_inputs rows) face
+# known inputs for all K steps, so their gate scalars are ORed over the
+# window and each active block is fetched ONCE for all K steps. Both halves
+# therefore move ~1/K of the per-step weight traffic of the single-step
+# kernel (events/trace.py's fused model counts exactly this).
+#
+# The external fetch is a MANUAL double-buffered DMA: the weight image
+# stays in HBM (memory_space=ANY), the kernel compacts the active block
+# ids into an SMEM schedule, then ping-pongs two VMEM slots — start the
+# copy of block i+1, wait on block i, accumulate. Silent blocks never
+# appear in the schedule, so they skip the DMA itself, not just the
+# compute (the single-step kernel relies on `when` guarding the pipelined
+# fetch; here the skip is explicit).
+#
+# External spikes arrive BITPACKED (repro.kernels.bitpack lane layout:
+# source s = lane s//32, bit s%32): the whole (K, batch-tile) external
+# raster rides in VMEM as uint32 lanes and is expanded to {0,1} rows only
+# at accumulate time. Exactness: the int32 accumulator and the shared LIF
+# epilogue run PER STEP inside the kernel, and inactive (step, example)
+# slots keep their carry bit-for-bit and emit zero spikes — the same
+# contract as SpikeEngine._masked_chunk_scan, which is what makes K-aligned
+# chunking with a masked remainder byte-identical to K single steps.
+
+
+def spike_timestep_fused_kernel(
+    act_ref,      # scalar-prefetch: (nb, ns_ext) window-OR ext activity
+    ext_ref,      # (K, Bb, n_lanes) uint32 bitpacked external spikes
+    wext_ref,     # (n_ext, P) int32 — HBM (ANY); manually DMA'd per block
+    wrec_ref,     # (P, P) int32 recurrent image, VMEM-resident per window
+    v_ref,        # (Bb, P) int32 membrane potential at window entry
+    spk0_ref,     # (Bb, P) int32 boundary spikes at window entry
+    active_ref,   # (K, Bb) int32 per-(step, example) advance mask
+    vout_ref,     # (Bb, P) int32 membrane potential at window exit
+    spkc_ref,     # (Bb, P) int32 boundary spikes at window exit
+    rast_ref,     # (K, Bb, P) int32 emitted spike raster
+    wbuf,         # scratch VMEM (2, block_src, P) int32 — DMA ping-pong
+    acc_ref,      # scratch VMEM (K*Bb, P) int32 external accumulator
+    sched_ref,    # scratch SMEM (ns_ext,) int32 active-block schedule
+    sem,          # DMA semaphores (2,)
+    *,
+    fuse_steps: int,
+    block_src: int,
+    decay_kind: str,
+    decay_rate: float,
+    decay_raw: int,
+    threshold_raw: int,
+    reset_mode: str,
+    use_mxu: bool,
+):
+    b = pl.program_id(0)
+    K = fuse_steps
+    Bb = v_ref.shape[0]
+    P = v_ref.shape[1]
+    ns_ext = act_ref.shape[1]
+    lanes_blk = block_src // 32
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- phase A: compact active external block ids into the schedule.
+    # A block is scheduled iff ANY of the K steps spikes on it for this
+    # batch tile (the window-OR the activity scalars carry).
+    def _collect(s, n):
+        @pl.when(act_ref[b, s] > 0)
+        def _():
+            sched_ref[n] = s
+
+        return n + jnp.where(act_ref[b, s] > 0, 1, 0)
+
+    n_active = jax.lax.fori_loop(0, ns_ext, _collect, jnp.int32(0))
+
+    # ---- phase B: double-buffered gated DMA + K-batched accumulate.
+    # Scheduled block i streams HBM -> wbuf[i % 2] while block i-1 is being
+    # accumulated; unscheduled (silent) blocks are never copied at all.
+    def _dma(i, slot):
+        blk = sched_ref[i]
+        return pltpu.make_async_copy(
+            wext_ref.at[pl.ds(blk * block_src, block_src)],
+            wbuf.at[slot],
+            sem.at[slot],
+        )
+
+    @pl.when(n_active > 0)
+    def _warmup():
+        _dma(jnp.int32(0), jnp.int32(0)).start()
+
+    # all K steps' packed lanes for the tile, flattened to (K*Bb, n_lanes):
+    # one block's dense {0,1} rows are recovered lane-by-lane below.
+    lanes_all = ext_ref[...].reshape(K * Bb, ext_ref.shape[2])
+    bit_shift = (
+        jnp.arange(block_src, dtype=jnp.uint32) % jnp.uint32(32)
+    )[None, :]
+
+    def _consume(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < n_active)
+        def _prefetch():
+            _dma(i + 1, 1 - slot).start()
+
+        _dma(i, slot).wait()
+        blk = sched_ref[i]
+        lanes = jax.lax.dynamic_slice_in_dim(
+            lanes_all, blk * lanes_blk, lanes_blk, axis=1
+        )  # (K*Bb, lanes_blk) uint32
+        rep = jnp.repeat(lanes, 32, axis=1)  # lane l at cols [32l, 32l+32)
+        src = ((rep >> bit_shift) & jnp.uint32(1)).astype(jnp.int32)
+        w = wbuf[slot]
+        if use_mxu:
+            # f32 MXU dot: K stacks along the BATCH axis of the dot, so
+            # each partial sum still reduces over one block_src block —
+            # the 2^24 exactness bound is the single-step kernel's bound.
+            acc_ref[...] += jax.lax.dot(
+                src.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ).astype(jnp.int32)
+        else:
+            def rows(j, acc):
+                spk = jax.lax.dynamic_slice_in_dim(src, j, 1, axis=1)
+                row = jax.lax.dynamic_slice_in_dim(w, j, 1, axis=0)
+                return acc + spk * row
+
+            acc_ref[...] = jax.lax.fori_loop(
+                0, block_src, rows, acc_ref[...]
+            )
+        return 0
+
+    jax.lax.fori_loop(0, n_active, _consume, 0)
+
+    # ---- phase C: K per-step recurrences + LIF epilogues on the resident
+    # recurrent image. vout/spkc double as the in-flight carry registers.
+    vout_ref[...] = v_ref[...]
+    spkc_ref[...] = spk0_ref[...]
+    acc_all = acc_ref[...]
+    wrec = wrec_ref[...]
+    active = active_ref[...]
+    n_rec_blocks = P // block_src
+
+    def _step(k, _):
+        spk_prev = spkc_ref[...]
+        syn = jax.lax.dynamic_slice_in_dim(acc_all, k * Bb, Bb, axis=0)
+
+        # recurrent accumulate, chunked at block_src rows so each MXU dot
+        # reduces over the same span as the single-step kernel (identical
+        # partial-sum bound); inter-chunk accumulation is exact int32.
+        def _rchunk(c, s2):
+            wblk = jax.lax.dynamic_slice_in_dim(
+                wrec, c * block_src, block_src, axis=0)
+            sblk = jax.lax.dynamic_slice_in_dim(
+                spk_prev, c * block_src, block_src, axis=1)
+            if use_mxu:
+                return s2 + jax.lax.dot(
+                    sblk.astype(jnp.float32), wblk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                ).astype(jnp.int32)
+
+            def rows(j, acc):
+                spk = jax.lax.dynamic_slice_in_dim(sblk, j, 1, axis=1)
+                row = jax.lax.dynamic_slice_in_dim(wblk, j, 1, axis=0)
+                return acc + spk * row
+
+            return jax.lax.fori_loop(0, block_src, rows, s2)
+
+        syn = jax.lax.fori_loop(0, n_rec_blocks, _rchunk, syn)
+        v_new, s_new = decay_and_fire(
+            vout_ref[...], syn,
+            decay_kind=decay_kind, decay_rate=decay_rate,
+            decay_raw=decay_raw, threshold_raw=threshold_raw,
+            reset_mode=reset_mode,
+        )
+        # masked-slot contract (== SpikeEngine._masked_chunk_scan): an
+        # inactive (step, example) keeps its carry and emits zero spikes.
+        act_k = jax.lax.dynamic_slice_in_dim(active, k, 1, axis=0)
+        keep = act_k.reshape(Bb, 1) != 0
+        vout_ref[...] = jnp.where(keep, v_new, vout_ref[...])
+        emitted = jnp.where(keep, s_new, 0)
+        rast_ref[pl.ds(k, 1)] = emitted[None]
+        spkc_ref[...] = jnp.where(keep, s_new, spkc_ref[...])
+        return 0
+
+    jax.lax.fori_loop(0, K, _step, 0)
+
+
+def build_spike_timestep_fused(
+    batch: int,
+    n_ext: int,
+    n_phys: int,
+    fuse_steps: int,
+    *,
+    decay_rate: float = 0.0,
+    threshold_raw: int,
+    reset_mode: str,
+    decay_kind: str = "shift",
+    decay_raw: int = 0,
+    block_batch: int = 8,
+    block_src: int = 128,
+    use_mxu: bool = False,
+    interpret: bool = False,
+):
+    """Build the K-step fused timestep:
+    ``fn(activity, ext_packed, w_ext, w_rec, v, spikes_prev, active)
+    -> (v_out, spikes_carry, raster)``.
+
+    Shapes (pre-padded by ops.py; lanes = n_ext // 32):
+      activity:   (batch//block_batch, n_ext//block_src) int32, window-OR
+      ext_packed: (fuse_steps, batch, lanes) uint32 bitpacked ext spikes
+      w_ext:      (n_ext, n_phys) int32 — external SRAM rows (HBM-resident)
+      w_rec:      (n_phys, n_phys) int32 — recurrent SRAM rows
+      v, spikes_prev: (batch, n_phys) int32 carries at window entry
+      active:     (fuse_steps, batch) int32 per-(step, example) mask
+    Returns v/spikes carries at window exit plus the
+    (fuse_steps, batch, n_phys) emitted raster.
+    """
+    validate_decay(decay_kind, decay_rate, decay_raw)
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
+    if batch % block_batch or n_ext % block_src:
+        raise ValueError("shapes must be pre-padded to block multiples")
+    if block_src % 32:
+        raise ValueError("block_src must be a multiple of the 32-bit lane")
+    if n_phys % 128 or n_phys % block_src:
+        raise ValueError(
+            "n_phys must be a multiple of 128 and of block_src "
+            "(the recurrent accumulate chunks at block_src rows)"
+        )
+    nb = batch // block_batch
+    ns_ext = n_ext // block_src
+    n_lanes = n_ext // 32
+    kernel = functools.partial(
+        spike_timestep_fused_kernel,
+        fuse_steps=fuse_steps,
+        block_src=block_src,
+        decay_kind=decay_kind,
+        decay_rate=decay_rate,
+        decay_raw=decay_raw,
+        threshold_raw=threshold_raw,
+        reset_mode=reset_mode,
+        use_mxu=use_mxu,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((fuse_steps, block_batch, n_lanes),
+                         lambda b, act: (0, b, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # w_ext stays in HBM
+            pl.BlockSpec((n_phys, n_phys), lambda b, act: (0, 0)),
+            pl.BlockSpec((block_batch, n_phys), lambda b, act: (b, 0)),
+            pl.BlockSpec((block_batch, n_phys), lambda b, act: (b, 0)),
+            pl.BlockSpec((fuse_steps, block_batch), lambda b, act: (0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_batch, n_phys), lambda b, act: (b, 0)),
+            pl.BlockSpec((block_batch, n_phys), lambda b, act: (b, 0)),
+            pl.BlockSpec((fuse_steps, block_batch, n_phys),
+                         lambda b, act: (0, b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, block_src, n_phys), jnp.int32),
+            pltpu.VMEM((fuse_steps * block_batch, n_phys), jnp.int32),
+            pltpu.SMEM((max(ns_ext, 1),), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n_phys), jnp.int32),
+            jax.ShapeDtypeStruct((batch, n_phys), jnp.int32),
+            jax.ShapeDtypeStruct((fuse_steps, batch, n_phys), jnp.int32),
         ],
         interpret=interpret,
     )

@@ -166,6 +166,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--gate", choices=list(GATES), default=None,
                     help="event-gate granularity of the serving engine "
                          "(per-example = the batch-tile=1 serving mode)")
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="K timesteps per fused kernel window on the "
+                         "serving engine (Pallas backends; weight blocks "
+                         "fetched once per window, outputs byte-identical "
+                         "for any K)")
     ap.add_argument("--models", type=int, default=2,
                     help="co-resident models sharing the fused engine")
     ap.add_argument("--devices", type=int, default=1,
@@ -278,7 +283,8 @@ def main(argv=None) -> None:
         mesh = make_spike_mesh(neuron=kn, batch=kb)
 
     rng = np.random.default_rng(args.seed)
-    sess = AcceleratorSession(backend=args.backend, mesh=mesh)
+    sess = AcceleratorSession(backend=args.backend, mesh=mesh,
+                              fuse_steps=args.fuse_steps)
     names = [f"snn{i}" for i in range(args.models)]
     for name in names:
         sess.deploy(name, make_net(rng, args.n_inputs, args.n_neurons))

@@ -174,14 +174,24 @@ class SpikeServer:
     idle, so ``gate="per-example"`` — the batch-tile=1 mode — lets every
     silent slot skip its own weight traffic instead of riding along with
     the tile OR. Outputs are bit-identical under either gate.
+
+    ``fuse_steps`` re-hosts the engine under a K-step fused kernel window
+    (``SpikeEngine.with_fuse_steps``): each ``feed`` chunk scans K-step
+    windows, fetching every weight block once per window instead of once
+    per step. ``chunk_steps`` need NOT be K-aligned — the engine pads the
+    window remainder with inactive steps under the same masked-slot
+    contract that pads ragged chunks, so outputs stay byte-identical.
     """
 
     def __init__(self, engine: SpikeEngine, *, n_slots: int = 8,
-                 chunk_steps: int = 8, mesh=None, gate: str | None = None):
+                 chunk_steps: int = 8, mesh=None, gate: str | None = None,
+                 fuse_steps: int | None = None):
         if chunk_steps <= 0:
             raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
         if gate is not None:
             engine = engine.with_gate(gate)
+        if fuse_steps is not None:
+            engine = engine.with_fuse_steps(fuse_steps)
         if mesh is not None and getattr(engine, "mesh", None) is not mesh:
             engine = engine.to_mesh(mesh)
         self.engine = engine
