@@ -374,6 +374,66 @@ def bench_async_frontend(backends, *, n_slots: int = 8,
                  per_timestep=True)
 
 
+def bench_migration(backends, *, n_slots: int = 8, chunk_steps: int = 8,
+                    activity: float = 0.05) -> None:
+    """The migration-overhead axis: what a stream-state move costs.
+
+    The connector's contract is exactness (a migrated raster is
+    byte-identical); this bench records its PRICE next to the work a
+    migration displaces: per-stream snapshot latency, a full in-memory
+    detach->attach round trip, the same round trip through a file-backed
+    connector (one fsync-less atomic write + read), and the serialized
+    blob size — against the cost of the ``chunk_steps`` feed quantum the
+    slot would have run in that time. Spill/restore being cheap relative
+    to a service quantum is what makes slot count stop bounding
+    concurrent streams.
+    """
+    import tempfile
+
+    from repro.serving.connector import (FileCarryConnector,
+                                         InMemoryCarryConnector)
+
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    chunk = (rng.random((chunk_steps, n_in)) < activity).astype(np.int32)
+    for backend in backends:
+        engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero",
+                             backend=backend)
+        server = SpikeServer(engine, n_slots=n_slots,
+                             chunk_steps=chunk_steps)
+        uids = [server.attach(f"s{i}") for i in range(n_slots - 1)]
+        server.feed({uid: chunk for uid in uids})  # warm carries + XLA
+        uid = uids[0]
+        t_feed = time_call(
+            lambda: server.feed({u: chunk for u in uids})[uid]["spikes"])
+        snap = server.snapshot_stream(uid)
+        blob_bytes = len(snap.to_bytes())
+        t_snap = time_call(lambda: server.snapshot_stream(uid).to_bytes())
+
+        mem = InMemoryCarryConnector()
+
+        def roundtrip(conn):
+            server.detach_stream(uid, conn)
+            server.attach_stream(conn, uid)
+            return server.carry["v"]
+
+        t_mem = time_call(lambda: roundtrip(mem))
+        with tempfile.TemporaryDirectory() as d:
+            disk = FileCarryConnector(d)
+            t_disk = time_call(lambda: roundtrip(disk))
+        emit(f"migration/roundtrip_{backend}", t_mem,
+             f"snapshot {t_snap:.0f} us, mem move {t_mem:.0f} us, file "
+             f"move {t_disk:.0f} us, blob {blob_bytes} B vs "
+             f"{chunk_steps}-step feed quantum {t_feed:.0f} us",
+             kind="migration", backend=backend, n_slots=n_slots,
+             snapshot_us=round(t_snap, 2), roundtrip_mem_us=round(t_mem, 2),
+             roundtrip_file_us=round(t_disk, 2), blob_bytes=blob_bytes,
+             feed_quantum_us=round(t_feed, 2),
+             migration_vs_quantum=round(t_mem / max(t_feed, 1e-9), 4))
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -401,6 +461,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "per K x backend x sparsity x occupancy, with "
                          "the trace window-OR count cross-checked "
                          "against the kernel's gate scalars (e.g. 1,4,8)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="also benchmark stream-state migration overhead: "
+                         "per-stream carry snapshot latency, in-memory and "
+                         "file-backed detach->attach round trips, and blob "
+                         "size vs the feed quantum a slot runs in that "
+                         "time (the byte-identity itself is pinned by "
+                         "tests/test_carry_migration.py)")
     ap.add_argument("--devices", type=int, default=1,
                     help="also run the engine/streaming benches on a mesh "
                          "over N devices (faked host devices on CPU)")
@@ -476,6 +543,8 @@ def main(argv=None) -> None:
                             activity=args.activity, mesh=mesh)
     if args.async_mode:
         bench_async_frontend(backends, activity=args.activity)
+    if args.migrate:
+        bench_migration(backends, activity=args.activity)
 
     rng = np.random.default_rng(0)
     B, S, P = args.batch, 784 + 1024, 1024
@@ -534,7 +603,7 @@ def main(argv=None) -> None:
             args={"batch": args.batch, "activity": args.activity,
                   "backend": args.backend, "streaming": args.streaming,
                   "async": args.async_mode, "sparsity": args.sparsity,
-                  "fuse_steps": args.fuse_steps,
+                  "fuse_steps": args.fuse_steps, "migrate": args.migrate,
                   "devices": args.devices, "mesh": args.mesh},
         )
 

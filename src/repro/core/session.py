@@ -57,10 +57,22 @@ class AcceleratorSession:
 
     def __init__(self, config: cerebra_h.CerebraHConfig | None = None,
                  backend: str = "reference", mesh=None,
-                 fuse_steps: int = 1):
+                 fuse_steps: int = 1, connector=None):
+        from repro.serving.connector import InMemoryCarryConnector
+
         self.config = config or cerebra_h.CerebraHConfig()
         self.backend = backend
         self.mesh = mesh
+        # the session's stream-state connector: rolling-redeploy drain
+        # parks in-flight carries here (and spill-enabled frontends share
+        # it); file-backed connectors survive the process.
+        self.connector = (connector if connector is not None
+                          else InMemoryCarryConnector())
+        # {lif signature: [(uid, connector key | None), ...]} — streams
+        # parked by deploy(), FIFO restore order, consumed by serve().
+        # A None key is a stream that was still waiting for a slot (no
+        # carry exists yet; it is simply re-queued).
+        self._parked_groups: dict = {}
         # K timesteps per fused kernel window for every engine this
         # session builds (1 = single-step kernels); outputs are
         # byte-identical for any K, only weight traffic changes.
@@ -92,7 +104,13 @@ class AcceleratorSession:
         return self.geometry.n_clusters - self._next_cluster
 
     def deploy(self, name: str, net: SNNetwork) -> DeployedModel:
-        """Deploy a model into the next free cluster range (config path)."""
+        """Deploy a model into the next free cluster range (config path).
+
+        A ROLLING redeploy when streams are in flight: every live stream
+        of every cached server is drained to the session connector first
+        (:meth:`_drain_streams`), and the next :meth:`serve` of its LIF
+        group restores it into the new fused server — the stream's raster
+        continues byte-identically across the deploy."""
         if name in self.models:
             raise ValueError(f"model {name!r} already deployed")
         geom = self.geometry
@@ -122,11 +140,39 @@ class AcceleratorSession:
         self.models[name] = model
         self._next_cluster += need
         self._next_input += net.n_inputs
+        self._drain_streams()         # park in-flight carries first —
         self._fused_engines.clear()   # resident set changed
         self._stream_servers.clear()  # fused layout changed with it
         self._frontends.clear()       # queues die with their servers
         self._serve_epoch += 1        # invalidate outstanding stream views
         return model
+
+    def _drain_streams(self) -> int:
+        """Rolling-redeploy drain: park every in-flight stream of every
+        cached server in the session connector, so :meth:`deploy` migrates
+        live traffic instead of dropping it. The next :meth:`serve` of the
+        same LIF group restores the parked streams — FIFO, what fits the
+        new server's slots — and their rasters continue byte-identically:
+        the physical array size is fixed across deploys, existing models
+        keep their cluster ranges and input offsets, and a freshly
+        deployed model's clusters stay silent for other streams (the
+        co-residency isolation ``run_all`` is pinned on). Returns the
+        number of carries parked."""
+        parked = 0
+        for key, server in self._stream_servers.items():
+            sig = key[1]
+            group = self._parked_groups.setdefault(sig, [])
+            epoch = self._serve_epoch
+            # admitted streams first (dict order = admission order), so
+            # FIFO restore preserves the pre-deploy service order
+            for uid in server.scheduler.active:
+                ckey = ("deploy", epoch, sig, uid)
+                self.connector.insert(ckey, server.snapshot_stream(uid))
+                group.append((uid, ckey))
+                parked += 1
+            for uid in server.scheduler.waiting:
+                group.append((uid, None))
+        return parked
 
     # ------------------------------------------------------------------
     def run(self, name: str, intensities, num_steps: int, key) -> dict:
@@ -276,7 +322,9 @@ class AcceleratorSession:
 
         A later :meth:`deploy` changes the fused layout and invalidates
         outstanding views: using one afterwards raises (epoch check);
-        call ``serve`` again after deploying.
+        call ``serve`` again after deploying. In-flight streams are NOT
+        lost: deploy parks their carries in the session connector and the
+        re-``serve`` restores them (byte-identical continuation).
         """
         from repro.serving.frontend import AsyncSpikeFrontend
         from repro.serving.snn import ModelStream, SpikeServer
@@ -308,6 +356,7 @@ class AcceleratorSession:
                                  n_slots=n_slots, chunk_steps=chunk_steps,
                                  gate=gate)
             self._stream_servers[key] = server
+            self._restore_parked(sig, server)
         fe = self._frontends.get(key)
         if frontend is not None:
             cfg = frontend
@@ -315,17 +364,21 @@ class AcceleratorSession:
                 fe = AsyncSpikeFrontend(
                     server, queue_capacity=cfg.queue_capacity,
                     backpressure=cfg.backpressure,
-                    deadline_ms=cfg.deadline_ms)
+                    deadline_ms=cfg.deadline_ms,
+                    connector=(self.connector if cfg.spill else None))
                 self._frontends[key] = fe
             elif (fe.queue_capacity, fe.backpressure,
-                  fe.default_deadline_ms) != (cfg.queue_capacity,
-                                              cfg.backpressure,
-                                              cfg.deadline_ms):
+                  fe.default_deadline_ms,
+                  fe.connector is not None) != (cfg.queue_capacity,
+                                                cfg.backpressure,
+                                                cfg.deadline_ms,
+                                                cfg.spill):
                 raise ValueError(
                     f"group {group_key[0]} already has a frontend with "
                     f"queue_capacity={fe.queue_capacity}, "
                     f"backpressure={fe.backpressure!r}, "
-                    f"deadline_ms={fe.default_deadline_ms}; co-resident "
+                    f"deadline_ms={fe.default_deadline_ms}, "
+                    f"spill={fe.connector is not None}; co-resident "
                     f"views must share one request queue")
         ext_offset = 0
         for m in group:
@@ -345,6 +398,30 @@ class AcceleratorSession:
             stale_check=lambda: self._serve_epoch != epoch,
             frontend=fe,
         )
+
+    def _restore_parked(self, sig, server) -> list:
+        """Restore streams :meth:`_drain_streams` parked for this LIF
+        group into the (new) server: FIFO, carries first-class via
+        ``attach_stream``, still-waiting uids simply re-queued. Restores
+        what fits the server's free slots; the rest stay parked for a
+        later ``serve`` (or manual ``attach_stream``). Returns restored
+        uids."""
+        parked = self._parked_groups.pop(sig, [])
+        restored, leftovers = [], []
+        for uid, ckey in parked:
+            if ckey is None:
+                server.attach(uid)
+                restored.append(uid)
+            elif server.scheduler.free_slots > 0:
+                snap = self.connector.select(ckey)
+                server.attach_stream(snap, uid=uid)
+                self.connector.evict(ckey)
+                restored.append(uid)
+            else:
+                leftovers.append((uid, ckey))
+        if leftovers:
+            self._parked_groups[sig] = leftovers
+        return restored
 
     def utilization(self) -> dict:
         geom = self.geometry

@@ -23,7 +23,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["StragglerDetector", "rebalance_shards"]
+__all__ = ["StragglerDetector", "donor_shards", "rebalance_shards"]
 
 
 @dataclasses.dataclass
@@ -66,6 +66,15 @@ class StragglerDetector:
             "std": np.sqrt(self._var),
             "strikes": self._strikes.copy(),
         }
+
+
+def donor_shards(flagged: np.ndarray) -> np.ndarray:
+    """The detector's donor list: indices of UNflagged hosts/shards, the
+    candidates to receive migrated work. Serving-side live migration
+    (``repro.serving.connector.rebalance_streams``) walks streams off
+    flagged batch shards onto these."""
+    flagged = np.asarray(flagged, bool)
+    return np.where(~flagged)[0]
 
 
 def rebalance_shards(batch_size: int, flagged: np.ndarray,

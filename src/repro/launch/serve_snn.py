@@ -88,6 +88,11 @@ class ShardLoadWatch:
             self.n_shards, dt)
         self.flag_counts += self.detector.observe(attributed)
 
+    def persistent_flags(self) -> np.ndarray:
+        """Shards flagged persistently enough to act on (bool mask)."""
+        return self.flag_counts >= max(
+            2, int(self.PERSISTENT_FRACTION * max(len(self.chunk_times), 1)))
+
     def summary(self) -> list[str]:
         if not self.chunk_times:
             return []
@@ -109,8 +114,7 @@ class ShardLoadWatch:
             f"p95 {np.percentile(ct, 95):.1f} ms), per-shard flag counts "
             f"{self.flag_counts.tolist()}"
         ]
-        persistent = self.flag_counts >= max(
-            2, int(self.PERSISTENT_FRACTION * len(ct)))
+        persistent = self.persistent_flags()
         if persistent.any() and not persistent.all():
             sizes = rebalance_shards(self.n_slots, persistent)
             lines.append(
@@ -179,6 +183,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mesh", default=None, metavar="KNxKB",
                     help="neuron x batch mesh split for --devices "
                          "(default: 2 x N/2 when N allows)")
+    ap.add_argument("--connector", default=None, metavar="DIR",
+                    help="root a FILE-backed stream-state carry connector "
+                         "at DIR (default: in-memory): redeploy drains, "
+                         "shard rebalances, and async deadline spills park "
+                         "carries there, and parked snapshots survive the "
+                         "process (crash recovery)")
+    ap.add_argument("--drain", type=int, default=None, metavar="ROUND",
+                    help="rolling redeploy drill (sync mode): after ROUND "
+                         "chunk-rounds, hot-deploy one extra model — live "
+                         "streams are drained to the connector and "
+                         "restored into the new fused server mid-flight "
+                         "(byte-identical continuation)")
     ap.add_argument("--n-inputs", type=int, default=24)
     ap.add_argument("--n-neurons", type=int, default=48)
     ap.add_argument("--intensity", type=float, default=0.25,
@@ -219,14 +235,27 @@ def run_async(args, server, views, requests, rng) -> None:
               "sharded/gated as requested)")
     arrive_at = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                           len(requests)))
+    handles: list = []
+    resumed: set = set()
     i = 0
     t0 = time.perf_counter()
-    while i < len(requests) or not fe.idle:
+    while i < len(requests) or not fe.idle or any(
+            h.state == "parked" for h in handles):
         now = time.perf_counter() - t0
         while i < len(requests) and arrive_at[i] <= now:
             uid, name, spikes = requests[i]
-            views[name].submit(spikes)
+            handles.append(views[name].submit(spikes))
             i += 1
+        # spill-on-evict (deadline + connector): a parked request's carry
+        # sits in the connector; give each ONE resume — it continues
+        # where it left off, byte-identically — then shed it for good
+        for h in handles:
+            if h.state == "parked":
+                if h.rid in resumed or not fe.resume(
+                        h, deadline_ms=args.deadline_ms):
+                    h.cancel()
+                else:
+                    resumed.add(h.rid)
         if fe.idle:
             # nothing queued or running: open-loop means we wait for the
             # next ARRIVAL, not spin the step loop
@@ -253,6 +282,10 @@ def run_async(args, server, views, requests, rng) -> None:
           f"{c.get('expired_running', 0)} mid-stream), "
           f"{c.get('cancelled', 0)} cancelled; "
           f"{steps} stream-timesteps -> {steps / wall:.0f} steps/s")
+    if c.get("parked", 0):
+        print(f"[serve-snn] spill-on-evict: {c['parked']} mid-stream "
+              f"expiries parked their carry in the connector, "
+              f"{c.get('resumed', 0)} resumed bit-clean (one retry each)")
     print(f"[serve-snn] queue depth: max {m['queue_depth']['max']}, "
           f"mean {m['queue_depth']['mean']:.1f} "
           f"(capacity {fe.queue_capacity})")
@@ -271,6 +304,12 @@ def main(argv=None) -> None:
     if args.mesh and args.devices <= 1:
         raise SystemExit("--mesh requires --devices N (N > 1); without it "
                          "the server would silently run unsharded")
+    if args.drain is not None and args.async_mode:
+        raise SystemExit("--drain is a sync-mode drill (the async frontend "
+                         "is rebuilt by the redeploy; resubmit instead)")
+    if args.drain is not None and args.drain < 1:
+        raise SystemExit("--drain must be >= 1 (chunk-rounds before the "
+                         "hot redeploy)")
 
     mesh = None
     if args.devices > 1:
@@ -283,8 +322,13 @@ def main(argv=None) -> None:
         mesh = make_spike_mesh(neuron=kn, batch=kb)
 
     rng = np.random.default_rng(args.seed)
+    connector = None
+    if args.connector is not None:
+        from repro.serving.connector import FileCarryConnector
+        connector = FileCarryConnector(args.connector)
     sess = AcceleratorSession(backend=args.backend, mesh=mesh,
-                              fuse_steps=args.fuse_steps)
+                              fuse_steps=args.fuse_steps,
+                              connector=connector)
     names = [f"snn{i}" for i in range(args.models)]
     for name in names:
         sess.deploy(name, make_net(rng, args.n_inputs, args.n_neurons))
@@ -294,7 +338,10 @@ def main(argv=None) -> None:
         frontend_cfg = FrontendConfig(
             queue_capacity=args.queue_capacity,
             backpressure=args.backpressure,
-            deadline_ms=args.deadline_ms)
+            deadline_ms=args.deadline_ms,
+            # with a deadline, spill mid-stream expiries to the session
+            # connector and resume each once instead of restarting
+            spill=args.deadline_ms is not None)
     views = {name: sess.serve(name, n_slots=args.n_slots,
                               chunk_steps=args.chunk, gate=args.gate,
                               frontend=frontend_cfg)
@@ -341,10 +388,31 @@ def main(argv=None) -> None:
     out_chunks: dict = {uid: [] for uid, _, _ in requests}  # fused rasters
     t_arrive: dict = {}
     t_done: dict = {}
+    rebalanced = False
+    steps_base = 0            # stream-timesteps served by drained servers
     t0 = time.perf_counter()
     round_i = 0
     while arrivals or live or server.scheduler.waiting:
         now = time.perf_counter()
+        if (args.drain is not None and round_i >= args.drain
+                and "hotswap" not in sess.models):
+            # rolling-redeploy drill: a NEW model lands mid-run; live
+            # streams are drained to the connector by deploy() and
+            # restored into the new fused server by the re-serve —
+            # their rasters continue byte-identically
+            n_live = len(server.scheduler.active)
+            steps_base += server.total_steps  # the old server's work
+            sess.deploy("hotswap",
+                        make_net(rng, args.n_inputs, args.n_neurons))
+            views = {name: sess.serve(name, n_slots=args.n_slots,
+                                      chunk_steps=args.chunk,
+                                      gate=args.gate)
+                     for name in names}
+            server = next(iter(views.values())).server
+            print(f"[serve-snn] --drain: hot-deployed 1 extra model after "
+                  f"round {round_i}; {n_live} live stream(s) migrated "
+                  f"mid-flight through the "
+                  f"{'file' if args.connector else 'in-memory'} connector")
         if arrivals:
             for uid, name, spikes in arrivals.pop(0):
                 views[name].attach(uid)
@@ -371,6 +439,20 @@ def main(argv=None) -> None:
             watch.observe(time.perf_counter() - t_chunk0, live_slots)
             for uid, r in res.items():
                 out_chunks[uid].append(r["spikes"])
+        if n_shards > 1 and not rebalanced:
+            flags = watch.persistent_flags()
+            if flags.any() and not flags.all():
+                from repro.serving.connector import rebalance_streams
+                moves = rebalance_streams(
+                    server, flags, slots_per_shard=watch.slots_per_shard)
+                if moves:
+                    rebalanced = True
+                    print(f"[serve-snn] straggler rebalance: migrated "
+                          f"{len(moves)} live stream(s) off flagged "
+                          f"shard(s) {np.where(flags)[0].tolist()} onto "
+                          f"donor-shard slots "
+                          f"{[(u, f, t) for u, f, t in moves]} "
+                          f"(uid, from, to) — carries moved bit-for-bit")
         for uid in done:
             name = live.pop(uid)[0]
             views[name].detach(uid)
@@ -379,7 +461,7 @@ def main(argv=None) -> None:
     wall = time.perf_counter() - t0
 
     lats = np.asarray([t_done[u] - t_arrive[u] for u in t_done])
-    steps = server.total_steps
+    steps = steps_base + server.total_steps
     print(f"[serve-snn] {len(t_done)} streams, {steps} stream-timesteps in "
           f"{wall:.2f}s over {round_i} rounds -> {steps / wall:.0f} steps/s")
     print(f"[serve-snn] per-stream latency: mean {lats.mean() * 1e3:.1f} ms, "

@@ -33,6 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.connector import (  # noqa: E402  (re-export)
+    CarryConnectorBase,
+    CarrySnapshot,
+    FileCarryConnector,
+    InMemoryCarryConnector,
+    migrate_stream,
+    rebalance_streams,
+)
 from repro.serving.frontend import (  # noqa: E402  (re-export)
     AsyncSpikeFrontend,
     FrontendConfig,
@@ -47,7 +55,9 @@ from repro.serving.snn import (  # noqa: E402  (re-export)
 
 __all__ = ["Request", "Completion", "BatchServer", "Scheduler",
            "SpikeServer", "SlotScheduler", "ModelStream", "StreamStats",
-           "AsyncSpikeFrontend", "FrontendConfig", "RequestHandle"]
+           "AsyncSpikeFrontend", "FrontendConfig", "RequestHandle",
+           "CarryConnectorBase", "CarrySnapshot", "InMemoryCarryConnector",
+           "FileCarryConnector", "migrate_stream", "rebalance_streams"]
 
 
 @dataclasses.dataclass

@@ -73,13 +73,18 @@ __all__ = [
 
 BACKPRESSURE: tuple[str, ...] = ("reject", "block", "drop-oldest")
 
-# terminal request states (a handle in one of these never changes again)
+# terminal request states (a handle in one of these never changes again).
+# "parked" is deliberately NOT terminal: a spilled request's carry sits in
+# the connector and resume() re-queues it (cancel() evicts it for good).
 _TERMINAL = frozenset({"done", "cancelled", "expired", "rejected", "dropped"})
 
 # rolling-window size of the latency / queue-depth sample buffers: big
 # enough that percentiles describe hours of traffic, bounded so a
 # long-running front door cannot grow without limit
 _METRICS_WINDOW = 100_000
+
+# per-process frontend ids, namespacing spill keys in a shared connector
+_FRONTEND_IDS = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +101,10 @@ class FrontendConfig:
     queue_capacity: int = 32
     backpressure: str = "reject"
     deadline_ms: float | None = None
+    #: park mid-stream deadline evictions in the session's carry
+    #: connector (state ``"parked"``) instead of zeroing them, so
+    #: ``resume()`` continues the stream bit-clean (spill-on-evict).
+    spill: bool = False
 
 
 @dataclasses.dataclass
@@ -112,6 +121,7 @@ class _Request:
     state: str = "queued"
     uid: object = None             # server stream uid once admitted
     cursor: int = 0                # timesteps fed so far
+    parked_key: object = None      # connector key while spilled/parked
     pieces: list = dataclasses.field(default_factory=list)
     admitted_at: float | None = None
     finished_at: float | None = None
@@ -204,7 +214,7 @@ class AsyncSpikeFrontend:
     def __init__(self, server, *, queue_capacity: int = 32,
                  backpressure: str = "reject",
                  deadline_ms: float | None = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, connector=None):
         if queue_capacity <= 0:
             raise ValueError(
                 f"queue_capacity must be positive, got {queue_capacity}")
@@ -220,6 +230,13 @@ class AsyncSpikeFrontend:
         self.backpressure = backpressure
         self.default_deadline_ms = deadline_ms
         self.clock = clock
+        #: spill-on-evict target (a CarryConnectorBase): with one set,
+        #: mid-stream deadline expiry PARKS the stream's carry instead of
+        #: zeroing it, and resume() continues it bit-clean. Keys are
+        #: namespaced per frontend so several front doors (and the
+        #: session's redeploy drain) can share one connector.
+        self.connector = connector
+        self._spill_ns = f"spill-{next(_FRONTEND_IDS)}"
         self._lock = threading.RLock()
         self._rid = itertools.count()
         self._queue: collections.deque[_Request] = collections.deque()
@@ -306,26 +323,10 @@ class AsyncSpikeFrontend:
                 events_policy=events_policy,
             )
             self.counts["submitted"] += 1
-            if len(self._queue) >= self.queue_capacity:
-                if self.backpressure == "reject":
-                    req.state = "rejected"
-                    self.counts["rejected"] += 1
-                    return RequestHandle(self, req)
-                if self.backpressure == "drop-oldest":
-                    oldest = self._queue.popleft()
-                    oldest.state = "dropped"
-                    self.counts["dropped"] += 1
-                else:  # "block": pump until a place frees up
-                    while len(self._queue) >= self.queue_capacity:
-                        progress = self.pump()
-                        if not any(progress[k] for k in
-                                   ("admitted", "retired", "expired",
-                                    "steps")):
-                            raise RuntimeError(
-                                "blocked submit cannot make progress: "
-                                "queue full and a pump round moved "
-                                "nothing (no free slots and no stream "
-                                "advancing)")
+            if not self._make_room():
+                req.state = "rejected"
+                self.counts["rejected"] += 1
+                return RequestHandle(self, req)
             self._queue.append(req)
             return RequestHandle(self, req)
 
@@ -345,13 +346,25 @@ class AsyncSpikeFrontend:
     def cancel(self, handle: RequestHandle) -> bool:
         """Withdraw a request. Queued: removed without ever touching the
         server. Running: evicted mid-stream — the slot carry is zeroed
-        (detach semantics) and the partial raster is kept. Terminal:
-        returns False (too late)."""
+        (detach semantics) and the partial raster is kept. Parked (or
+        queued-for-resume): the spilled carry is evicted from the
+        connector; the server is never touched — it holds no state for a
+        parked stream. Terminal: returns False (too late)."""
         req = handle._req
         with self._lock:
             if req.state == "queued":
                 self._queue.remove(req)
+                if req.parked_key is not None:
+                    self.connector.evict(req.parked_key)
+                    req.parked_key = None
                 req.state = "cancelled"
+                self.counts["cancelled"] += 1
+                return True
+            if req.state == "parked":
+                self.connector.evict(req.parked_key)
+                req.parked_key = None
+                req.state = "cancelled"
+                req.finished_at = self.clock()
                 self.counts["cancelled"] += 1
                 return True
             if req.state == "running":
@@ -362,6 +375,50 @@ class AsyncSpikeFrontend:
                 self.counts["cancelled"] += 1
                 return True
             return False
+
+    def resume(self, handle: RequestHandle,
+               deadline_ms: float | None = None) -> bool:
+        """Re-queue a PARKED request: on admission its spilled carry is
+        restored into a free slot and the stream continues exactly where
+        it left off — the concatenated raster is byte-identical to a
+        never-spilled run. ``deadline_ms`` arms a fresh deadline from now
+        (None = no deadline this time). Under backpressure the frontend's
+        policy applies; ``"reject"`` leaves the request parked and
+        returns False."""
+        req = handle._req
+        with self._lock:
+            if req.state != "parked":
+                return False
+            if not self._make_room():
+                return False
+            now = self.clock()
+            req.deadline = (None if deadline_ms is None
+                            else now + deadline_ms / 1e3)
+            req.state = "queued"
+            self._queue.append(req)
+            return True
+
+    def _make_room(self) -> bool:
+        """Apply the backpressure policy until the queue has a place;
+        False = policy says refuse (caller keeps the request out)."""
+        if len(self._queue) < self.queue_capacity:
+            return True
+        if self.backpressure == "reject":
+            return False
+        if self.backpressure == "drop-oldest":
+            oldest = self._queue.popleft()
+            oldest.state = "dropped"
+            self.counts["dropped"] += 1
+            return True
+        while len(self._queue) >= self.queue_capacity:  # "block"
+            progress = self.pump()
+            if not any(progress[k] for k in
+                       ("admitted", "retired", "expired", "steps")):
+                raise RuntimeError(
+                    "blocked submit cannot make progress: queue full and "
+                    "a pump round moved nothing (no free slots and no "
+                    "stream advancing)")
+        return True
 
     # -- the pump ----------------------------------------------------------
     def pump(self) -> dict:
@@ -378,30 +435,56 @@ class AsyncSpikeFrontend:
             summary = {"admitted": 0, "retired": 0, "expired": 0,
                        "steps": 0}
             # 1. deadline expiry — queued requests are refused outright
+            # (a resumed one falls back to "parked": its carry is still
+            # in the connector and a later resume() may try again)
             for req in [r for r in self._queue
                         if r.deadline is not None and now > r.deadline]:
                 self._queue.remove(req)
-                req.state = "expired"
+                if req.parked_key is not None:
+                    req.state = "parked"
+                else:
+                    req.state = "expired"
+                    self.counts["expired_queued"] += 1
                 self.counts["expired"] += 1
-                self.counts["expired_queued"] += 1
                 summary["expired"] += 1
             # ... mid-stream streams are evicted like any other eviction:
             # detach zeroes the slot carry, so the next occupant powers
-            # up clean (pinned by tests/test_serving_frontend.py)
+            # up clean (pinned by tests/test_serving_frontend.py).
+            # With a connector, the eviction SPILLS instead: the carry is
+            # parked under a frontend-namespaced key and the request goes
+            # to state "parked" — resume() continues it bit-clean.
             for uid, req in [(u, r) for u, r in self._running.items()
                              if r.deadline is not None
                              and now > r.deadline]:
-                self.server.detach(uid)
                 del self._running[uid]
-                req.state = "expired"
-                req.finished_at = now
-                self.counts["expired"] += 1
-                self.counts["expired_running"] += 1
+                if self.connector is not None:
+                    req.parked_key = (self._spill_ns, req.rid)
+                    snap = self.server.snapshot_stream(uid)
+                    self.server.detach(uid)
+                    self.connector.insert(req.parked_key, snap)
+                    req.uid = None
+                    req.state = "parked"
+                    self.counts["parked"] += 1
+                else:
+                    self.server.detach(uid)
+                    req.state = "expired"
+                    req.finished_at = now
+                    self.counts["expired"] += 1
+                    self.counts["expired_running"] += 1
                 summary["expired"] += 1
             # 2. continuous-batching admission: queue head -> free slots
+            # (a resumed request re-attaches FROM its parked carry — the
+            # only admission that does not power up from zero)
             while self._queue and self.server.scheduler.free_slots > 0:
                 req = self._queue.popleft()
-                req.uid = self.server.attach()
+                if req.parked_key is not None:
+                    snap = self.connector.select(req.parked_key)
+                    req.uid = self.server.attach_stream(snap)
+                    self.connector.evict(req.parked_key)
+                    req.parked_key = None
+                    self.counts["resumed"] += 1
+                else:
+                    req.uid = self.server.attach()
                 req.admitted_at = now
                 req.state = "running"
                 self._running[req.uid] = req

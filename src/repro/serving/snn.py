@@ -77,6 +77,12 @@ class SlotScheduler:
         return len(self._free)
 
     @property
+    def free_slot_ids(self) -> list:
+        """Free slot indices in FIFO-reuse order (copy) — migration
+        passes pick targeted destinations from this."""
+        return list(self._free)
+
+    @property
     def waiting(self) -> list:
         """uids queued for admission, FIFO order (copy)."""
         return list(self._waiting)
@@ -101,6 +107,18 @@ class SlotScheduler:
             return slot
         self._waiting.append(uid)
         return None
+
+    def submit_at(self, uid, slot: int) -> int:
+        """Admit uid into a SPECIFIC free slot (migration / rebalance
+        placement). Unlike :meth:`submit`, never queues: a targeted
+        restore must land now or fail loudly."""
+        if uid in self._slot_of or uid in self._waiting:
+            raise ValueError(f"stream {uid!r} already submitted")
+        if slot not in self._free:
+            raise ValueError(f"slot {slot} is not free")
+        self._free.remove(slot)
+        self._slot_of[uid] = slot
+        return slot
 
     def release(self, uid) -> tuple[int, object | None]:
         """Free uid's slot; the FIFO-head waiter (if any) is admitted into
@@ -238,6 +256,132 @@ class SpikeServer:
 
     def slot_of(self, uid) -> int | None:
         return self.scheduler.slot_of(uid)
+
+    # -- carry migration (the stream-state connector) ---------------------
+    def slot_params(self) -> dict:
+        """This server's carry-compatibility identity (see
+        :func:`repro.serving.connector.slot_params_of`)."""
+        from repro.serving.connector import slot_params_of
+
+        return slot_params_of(self.engine)
+
+    def snapshot_stream(self, uid) -> "CarrySnapshot":
+        """A stream's portable state — carry rows + counters — WITHOUT
+        disturbing it (the stream keeps running; checkpointing uses
+        this). The stream must hold a slot."""
+        from repro.serving.connector import CarrySnapshot
+
+        slot = self.scheduler.slot_of(uid)
+        if slot is None:
+            raise ValueError(
+                f"stream {uid!r} is waiting for a slot; nothing to "
+                f"snapshot (its carry does not exist yet)")
+        st = self.streams[uid]
+        return CarrySnapshot(
+            stream_id=uid,
+            slot_params=self.slot_params(),
+            arrays={
+                "v": np.asarray(self.carry["v"][slot], np.int32),
+                "spikes": np.asarray(self.carry["spikes"][slot], np.int32),
+            },
+            meta={"steps": int(st.steps),
+                  "spike_count": int(st.spike_count)},
+        )
+
+    def detach_stream(self, uid, connector) -> "CarrySnapshot":
+        """Drain a stream to ``connector``: snapshot, park, then detach
+        (the slot is zeroed and handed on exactly like :meth:`detach`).
+        The stream is gone from this server but not from the world —
+        :meth:`attach_stream` restores it anywhere compatible."""
+        snap = self.snapshot_stream(uid)
+        connector.insert(uid, snap)
+        self.detach(uid)
+        return snap
+
+    def attach_stream(self, source, uid=None, *, slot: int | None = None):
+        """Admit a stream whose carry starts from a snapshot instead of
+        power-on zero — the restore half of live migration.
+
+        Args:
+          source: a :class:`~repro.serving.connector.CarrySnapshot`, or a
+            connector to ``select`` (and, on success, ``evict``) the
+            snapshot from under ``uid``.
+          uid: the restored stream's id on THIS server (defaults to the
+            snapshot's recorded id when restoring from a connector, else
+            a fresh auto id). Must not collide with a live stream.
+          slot: targeted placement (rebalance); default = FIFO free slot.
+
+        The snapshot is slot-params / dtype / shape checked before one
+        byte lands; a restored stream needs a slot NOW (its state cannot
+        wait in a queue), so no free slot raises ``RuntimeError``.
+        """
+        from repro.serving.connector import CarrySnapshot
+
+        connector = None
+        if isinstance(source, CarrySnapshot):
+            snap = source
+            if uid is None:
+                uid = next(self._auto_uid)
+                while uid in self.streams:
+                    uid = next(self._auto_uid)
+        else:
+            connector = source
+            if uid is None:
+                raise ValueError(
+                    "attach_stream from a connector needs the stream id")
+            snap = connector.select(uid)
+            if snap is None:
+                raise KeyError(f"no parked carry for stream {uid!r}")
+        snap.check_compatible(self.slot_params())
+        if self.scheduler.free_slots == 0:
+            raise RuntimeError(
+                f"cannot restore stream {uid!r}: no free slot (a restored "
+                f"carry cannot wait in the admission queue)")
+        now = time.perf_counter()
+        if slot is None:
+            slot = self.scheduler.submit(uid)
+        else:
+            slot = self.scheduler.submit_at(uid, slot)
+        self.carry = {
+            "v": self.carry["v"].at[slot].set(
+                jnp.asarray(snap.arrays["v"])),
+            "spikes": self.carry["spikes"].at[slot].set(
+                jnp.asarray(snap.arrays["spikes"])),
+        }
+        self.streams[uid] = StreamStats(
+            uid=uid,
+            steps=int(snap.meta.get("steps", 0)),
+            spike_count=int(snap.meta.get("spike_count", 0)),
+            attached_at=now, admitted_at=now,
+        )
+        if connector is not None:
+            connector.evict(uid)
+        return uid
+
+    def checkpoint_streams(self, connector) -> list:
+        """Park a snapshot of EVERY live stream in ``connector`` without
+        disturbing any of them — the crash-recovery write barrier. With a
+        :class:`~repro.serving.connector.FileCarryConnector` this is what
+        lets a dead server's streams resume bit-clean on a fresh one.
+        Returns the checkpointed uids."""
+        uids = sorted(self.scheduler.active, key=repr)
+        for uid in uids:
+            connector.insert(uid, self.snapshot_stream(uid))
+        return uids
+
+    def restore_streams(self, connector, uids=None) -> list:
+        """Re-admit parked streams (all of ``connector``'s, or ``uids``)
+        into free slots, consuming their snapshots; restores what fits
+        and leaves the rest parked. Returns the restored uids."""
+        if uids is None:
+            uids = connector.stream_ids()
+        restored = []
+        for uid in uids:
+            if self.scheduler.free_slots == 0:
+                break
+            self.attach_stream(connector, uid)
+            restored.append(uid)
+        return restored
 
     # -- streaming --------------------------------------------------------
     def feed(self, inputs: dict) -> dict:

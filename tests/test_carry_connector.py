@@ -1,0 +1,326 @@
+"""Carry-snapshot wire-format + connector-store contracts.
+
+The snapshot blob is the WIRE FORMAT live migration rides on — redeploy
+drains, frontend spills, shard rebalances, and crash recovery all move
+carries through it — so the claims pinned here are:
+
+  * serialize -> deserialize is the identity for ANY array table (ragged
+    slot shapes, every serializable dtype, empty/huge metadata) —
+    hypothesis property + deterministic companions, mirroring the
+    ``test_bitpack.py`` pattern;
+  * every corruption is REJECTED loudly: flipped bytes (CRC), truncation,
+    bad magic, unknown version, malformed headers, trailing garbage;
+  * restore-side validation names the first incompatible slot-params
+    field, and rejects wrong carry dtypes/shapes — a snapshot can never
+    silently restore into an engine it did not come from;
+  * both connector stores (memory, file) give the same insert / select /
+    evict semantics over ``(stream_id, slot_params)`` keys, the file
+    store round-trips through real files atomically, and
+    ``stream_ids()`` enumerates deterministically (recovery order).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import DecaySpec, SpikeEngine
+from repro.serving.connector import (SNAPSHOT_MAGIC, SNAPSHOT_VERSION,
+                                     CarrySnapshot, FileCarryConnector,
+                                     InMemoryCarryConnector, slot_params_of)
+
+THRESH = 1 << 16
+
+_PARAMS = {
+    "n_phys": 16, "decay_kind": "shift", "decay_rate": 0.25,
+    "decay_raw": 0, "threshold_raw": THRESH, "reset_mode": "subtract",
+}
+
+
+def _snap(rng, n_phys=16, stream_id="s", meta=None):
+    return CarrySnapshot(
+        stream_id=stream_id,
+        slot_params=dict(_PARAMS, n_phys=n_phys),
+        arrays={
+            "v": rng.integers(-(1 << 20), 1 << 20, n_phys).astype(np.int32),
+            "spikes": rng.integers(0, 2, n_phys).astype(np.int32),
+        },
+        meta=meta if meta is not None else {"steps": 7, "spike_count": 3},
+    )
+
+
+# --------------------------------------------------------------------------
+# round trip: property test + deterministic companions
+# --------------------------------------------------------------------------
+
+_DTYPES = ["int8", "uint8", "int16", "uint16", "int32", "uint32",
+           "int64", "uint64", "float32", "float64", "bool"]
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n_arrays=st.integers(0, 4),
+       dims=st.lists(st.integers(0, 7), min_size=0, max_size=3),
+       dtype=st.sampled_from(_DTYPES),
+       steps=st.integers(0, 2**40),
+       seed=st.integers(0, 2**16))
+@pytest.mark.slow
+def test_snapshot_round_trip_property(n_arrays, dims, dtype, steps, seed):
+    """to_bytes -> from_bytes is the identity for ANY array table: ragged
+    shapes (zero-size dims included), every serializable dtype, and
+    arbitrary counter metadata."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(dims)
+    arrays = {}
+    for i in range(n_arrays):
+        if dtype == "bool":
+            arr = rng.random(shape) < 0.5
+        elif dtype.startswith("float"):
+            arr = rng.normal(size=shape).astype(dtype)
+        else:
+            info = np.iinfo(dtype)
+            arr = rng.integers(info.min, info.max, shape,
+                               dtype=np.int64 if info.min < 0
+                               else np.uint64).astype(dtype)
+        arrays[f"a{i}"] = arr
+    snap = CarrySnapshot(stream_id=seed, slot_params=dict(_PARAMS),
+                         arrays=arrays, meta={"steps": steps})
+    got = CarrySnapshot.from_bytes(snap.to_bytes())
+    assert got.version == SNAPSHOT_VERSION
+    assert got.slot_params == snap.slot_params
+    assert got.meta == {"steps": steps}
+    assert set(got.arrays) == set(arrays)
+    for name, arr in arrays.items():
+        assert got.arrays[name].dtype == arr.dtype
+        assert got.arrays[name].shape == arr.shape
+        np.testing.assert_array_equal(got.arrays[name], arr)
+
+
+def test_snapshot_round_trip_deterministic(rng):
+    """The same identity on fixed corner cases (always runs)."""
+    cases = [
+        _snap(rng),                                    # the real carry shape
+        _snap(rng, n_phys=1),                          # single neuron
+        _snap(rng, stream_id=("tup", 3), meta={}),     # tuple id, empty meta
+        CarrySnapshot(stream_id=0, slot_params=dict(_PARAMS),
+                      arrays={}, meta={"steps": 0}),   # no arrays at all
+        CarrySnapshot(stream_id="z", slot_params=dict(_PARAMS),
+                      arrays={"v": np.zeros((0,), np.int32)},
+                      meta={}),                        # zero-length array
+    ]
+    for snap in cases:
+        got = CarrySnapshot.from_bytes(snap.to_bytes())
+        assert got.slot_params == snap.slot_params
+        assert got.meta == snap.meta
+        for name, arr in snap.arrays.items():
+            assert got.arrays[name].dtype == arr.dtype
+            np.testing.assert_array_equal(got.arrays[name], arr)
+
+
+def test_snapshot_blob_is_deterministic(rng):
+    """Same snapshot -> same bytes (sorted header keys, raw payload):
+    checkpointing twice cannot dirty a file-backed store."""
+    snap = _snap(rng)
+    assert snap.to_bytes() == snap.to_bytes()
+
+
+# --------------------------------------------------------------------------
+# corruption: every damaged blob is rejected loudly
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(pos=st.integers(0, 10_000), bit=st.integers(0, 7),
+       seed=st.integers(0, 2**16))
+@pytest.mark.slow
+def test_any_flipped_bit_is_rejected_property(pos, bit, seed):
+    """Flipping ANY single bit of a blob makes from_bytes raise — magic,
+    header, payload, and CRC bytes alike (CRC covers everything)."""
+    rng = np.random.default_rng(seed)
+    blob = bytearray(_snap(rng).to_bytes())
+    blob[pos % len(blob)] ^= 1 << bit
+    with pytest.raises(ValueError):
+        CarrySnapshot.from_bytes(bytes(blob))
+
+
+def test_corrupted_blobs_rejected_deterministic(rng):
+    blob = _snap(rng).to_bytes()
+    cases = [
+        b"",                                   # empty
+        blob[:8],                              # shorter than any header
+        blob[:-5],                             # truncated payload
+        blob + b"\x00",                        # trailing garbage
+        b"NOTME" + blob[5:],                   # bad magic
+    ]
+    for bad in cases:
+        with pytest.raises(ValueError):
+            CarrySnapshot.from_bytes(bad)
+    # flipped payload byte: CRC catches it
+    flipped = bytearray(blob)
+    flipped[len(blob) // 2] ^= 0xFF
+    with pytest.raises(ValueError, match="CRC"):
+        CarrySnapshot.from_bytes(bytes(flipped))
+
+
+def test_unknown_version_rejected(rng):
+    """A future-format blob is refused, not mis-parsed. The version field
+    sits right after the magic; patch it and re-seal the CRC so ONLY the
+    version is wrong."""
+    import struct
+    import zlib
+
+    blob = _snap(rng).to_bytes()
+    body = bytearray(blob[:-4])
+    struct.pack_into("<H", body, len(SNAPSHOT_MAGIC), SNAPSHOT_VERSION + 1)
+    resealed = bytes(body) + struct.pack(
+        "<I", zlib.crc32(bytes(body)) & 0xFFFFFFFF)
+    with pytest.raises(ValueError, match="version"):
+        CarrySnapshot.from_bytes(resealed)
+
+
+def test_unserializable_dtype_refused():
+    snap = CarrySnapshot(
+        stream_id="c", slot_params=dict(_PARAMS),
+        arrays={"v": np.zeros(4, np.complex128)})
+    with pytest.raises(ValueError, match="dtype"):
+        snap.to_bytes()
+
+
+# --------------------------------------------------------------------------
+# restore-side validation: slot params + carry dtype/shape
+# --------------------------------------------------------------------------
+
+def test_slot_params_of_matches_engine(rng):
+    W = np.asarray(rng.integers(-100, 100, (26, 16)), np.int32)
+    engine = SpikeEngine(W, 10, decay=DecaySpec.shift(0.25),
+                         threshold_raw=THRESH, reset_mode="subtract")
+    assert slot_params_of(engine) == _PARAMS
+
+
+def test_slot_params_exclude_hosting_choices(rng):
+    """backend / gate / fuse_steps are re-hostings with byte-identical
+    outputs, so they must NOT fragment the compatibility key."""
+    W = np.asarray(rng.integers(-100, 100, (26, 16)), np.int32)
+    base = SpikeEngine(W, 10, decay=DecaySpec.shift(0.25),
+                       threshold_raw=THRESH, reset_mode="subtract")
+    for other in (base.with_gate("per-example"), base.with_fuse_steps(4),
+                  SpikeEngine(W, 10, decay=DecaySpec.shift(0.25),
+                              threshold_raw=THRESH, reset_mode="subtract",
+                              backend="pallas")):
+        assert slot_params_of(other) == slot_params_of(base)
+
+
+def test_check_compatible_names_mismatched_field(rng):
+    snap = _snap(rng)
+    for field, value in [("n_phys", 32), ("decay_kind", "mul"),
+                         ("decay_rate", 0.5), ("threshold_raw", 1 << 10),
+                         ("reset_mode", "zero")]:
+        with pytest.raises(ValueError, match=field):
+            snap.check_compatible(dict(_PARAMS, **{field: value}))
+    snap.check_compatible(dict(_PARAMS))  # identical params pass
+
+
+def test_check_compatible_rejects_bad_carry_arrays(rng):
+    wrong_dtype = _snap(rng)
+    wrong_dtype.arrays["v"] = wrong_dtype.arrays["v"].astype(np.int64)
+    with pytest.raises(ValueError, match="dtype"):
+        wrong_dtype.check_compatible(dict(_PARAMS))
+
+    wrong_shape = _snap(rng)
+    wrong_shape.arrays["spikes"] = np.zeros((2, 16), np.int32)
+    with pytest.raises(ValueError, match="shape"):
+        wrong_shape.check_compatible(dict(_PARAMS))
+
+    missing = _snap(rng)
+    del missing.arrays["spikes"]
+    with pytest.raises(ValueError, match="missing"):
+        missing.check_compatible(dict(_PARAMS))
+
+
+# --------------------------------------------------------------------------
+# connector stores: one contract, two implementations
+# --------------------------------------------------------------------------
+
+def _connectors(tmp_path):
+    return [InMemoryCarryConnector(),
+            FileCarryConnector(str(tmp_path / "carries"))]
+
+
+def test_connector_crud_contract(rng, tmp_path):
+    for conn in _connectors(tmp_path):
+        snap = _snap(rng, stream_id="a")
+        assert conn.select("a") is None
+        assert not conn.evict("a")
+        assert len(conn) == 0
+
+        conn.insert("a", snap)
+        assert "a" in conn and len(conn) == 1
+        got = conn.select("a")
+        np.testing.assert_array_equal(got.arrays["v"], snap.arrays["v"])
+        assert got.meta == snap.meta
+
+        # select does NOT consume; overwrite keeps the latest
+        snap2 = _snap(rng, stream_id="a", meta={"steps": 99})
+        conn.insert("a", snap2)
+        assert len(conn) == 1
+        assert conn.select("a").meta["steps"] == 99
+
+        assert conn.evict("a") and len(conn) == 0
+        assert conn.select("a") is None
+
+
+def test_connector_select_checks_slot_params(rng, tmp_path):
+    for conn in _connectors(tmp_path):
+        conn.insert("a", _snap(rng, stream_id="a"))
+        assert conn.select("a", dict(_PARAMS)) is not None
+        with pytest.raises(ValueError, match="n_phys"):
+            conn.select("a", dict(_PARAMS, n_phys=999))
+        assert "a" in conn  # the failed select did not consume it
+
+
+def test_connector_stream_ids_sorted(rng, tmp_path):
+    for conn in _connectors(tmp_path):
+        for sid in ["z", "a", "m"]:
+            conn.insert(sid, _snap(rng, stream_id=sid))
+        assert conn.stream_ids() == ["a", "m", "z"]
+
+
+def test_file_connector_persists_across_instances(rng, tmp_path):
+    """The point of the file store: a NEW connector over the same root
+    sees the old one's snapshots (crash recovery's first step)."""
+    root = str(tmp_path / "carries")
+    a = FileCarryConnector(root)
+    a.insert(7, _snap(rng, stream_id=7))
+    a.insert("s", _snap(rng, stream_id="s"))
+
+    b = FileCarryConnector(root)
+    assert sorted(b.stream_ids(), key=repr) == sorted([7, "s"], key=repr)
+    np.testing.assert_array_equal(
+        b.select(7).arrays["v"], a.select(7).arrays["v"])
+
+
+def test_file_connector_atomic_write_leaves_no_tmp(rng, tmp_path):
+    import os
+
+    root = str(tmp_path / "carries")
+    conn = FileCarryConnector(root)
+    for i in range(5):
+        conn.insert(i, _snap(rng, stream_id=i))
+    files = os.listdir(root)
+    assert len(files) == 5
+    assert all(f.endswith(".carry") for f in files)
+
+
+def test_file_connector_corrupt_file_fails_loudly(rng, tmp_path):
+    import os
+
+    root = str(tmp_path / "carries")
+    conn = FileCarryConnector(root)
+    conn.insert("a", _snap(rng, stream_id="a"))
+    fname = os.listdir(root)[0]
+    path = os.path.join(root, fname)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(ValueError, match="corrupt"):
+        conn.select("a")

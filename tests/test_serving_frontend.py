@@ -10,6 +10,12 @@ server; deadline expiry mid-stream zeroes the slot carry exactly like any
 eviction; backpressure policies do what they say; and admission order +
 slot assignment is a deterministic function of the submit/cancel/pump
 sequence (hypothesis property with deterministic companions).
+
+With a carry connector attached (spill-on-evict), mid-stream expiry PARKS
+the stream instead of killing it: ``resume()`` must continue it
+byte-identically to a never-spilled run, cancel-while-parked must never
+touch the server, and the determinism property extends over the
+detach/attach (spill/resume) ops.
 """
 
 import hypothesis
@@ -306,6 +312,191 @@ def test_admission_determinism_property(seed, n_slots, chunk_steps,
     kw = dict(lengths=lengths, cancel_at=cancel_at, n_slots=n_slots,
               chunk_steps=chunk_steps, capacity=capacity, policy=policy)
     assert (_run_scenario(engine, **kw) == _run_scenario(engine, **kw))
+
+
+# --------------------------------------------------------------------------
+# Spill-on-evict: deadline expiry parks the carry, resume continues it
+# --------------------------------------------------------------------------
+
+def _spill_frontend(rng, *, n_slots=1, chunk_steps=2, capacity=4):
+    from repro.serving.connector import InMemoryCarryConnector
+
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=n_slots, chunk_steps=chunk_steps)
+    clock = VirtualClock()
+    conn = InMemoryCarryConnector()
+    fe = AsyncSpikeFrontend(server, queue_capacity=capacity, clock=clock,
+                            connector=conn)
+    return engine, server, clock, conn, fe
+
+
+def test_spill_resume_bit_clean(rng):
+    """The spill contract: a mid-stream deadline eviction with a
+    connector parks the carry; resume() finishes the stream and the FULL
+    raster is byte-identical to a never-spilled run — no 'partial'."""
+    engine, server, clock, conn, fe = _spill_frontend(rng)
+    raster = _rasters(rng, (10,), engine.n_inputs)[0]
+    want = np.asarray(engine.run(raster[:, None, :])["spikes"])[:, 0]
+
+    h = fe.submit(raster, deadline_ms=1_000)
+    fe.pump()                      # 2 of 10 steps served
+    assert h.state == "running"
+    clock.t = 2.0                  # deadline (t=1.0) passes mid-stream
+    fe.pump()
+    assert h.state == "parked" and not h.done
+    assert h.result() is None      # parked is NOT terminal
+    assert len(conn) == 1 and server.scheduler.free_slots == 1
+
+    assert fe.resume(h) is True
+    assert h.state == "queued"
+    fe.drain()
+    assert h.state == "done"
+    res = h.result()
+    assert "partial" not in res
+    np.testing.assert_array_equal(res["spikes"], want)
+    assert len(conn) == 0          # admission consumed the parked carry
+    c = fe.metrics()["counts"]
+    assert (c["parked"], c["resumed"], c["done"]) == (1, 1, 1)
+    assert "expired_running" not in c
+
+
+def test_spill_interleaves_with_other_traffic(rng):
+    """Another request runs in the spilled stream's slot between spill
+    and resume — the resumed stream must still come back bit-clean (its
+    state lived in the connector, not the slot)."""
+    engine, server, clock, conn, fe = _spill_frontend(rng)
+    ra, rb = _rasters(rng, (8, 4), engine.n_inputs)
+    want_a = np.asarray(engine.run(ra[:, None, :])["spikes"])[:, 0]
+
+    a = fe.submit(ra, deadline_ms=1_000)
+    fe.pump()
+    clock.t = 2.0
+    fe.pump()                      # a parked; its slot is free
+    b = fe.submit(rb)              # b claims (and dirties) that slot
+    fe.drain()
+    assert b.state == "done" and a.state == "parked"
+    assert fe.resume(a) is True
+    fe.drain()
+    np.testing.assert_array_equal(a.result()["spikes"], want_a)
+    assert "partial" not in a.result()
+
+
+def test_cancel_while_parked_never_touches_server(rng):
+    engine, server, clock, conn, fe = _spill_frontend(rng)
+    h = fe.submit(_rasters(rng, (8,), engine.n_inputs)[0], deadline_ms=500)
+    fe.pump()
+    clock.t = 1.0
+    fe.pump()
+    assert h.state == "parked"
+    steps_before = server.total_steps
+    active_before = dict(server.scheduler.active)
+
+    assert h.cancel() is True
+    assert h.state == "cancelled" and h.done
+    assert len(conn) == 0                       # spilled carry evicted
+    assert server.total_steps == steps_before   # server never touched
+    assert dict(server.scheduler.active) == active_before
+    assert fe.resume(h) is False                # terminal: too late
+    assert h.cancel() is False
+
+
+def test_parked_request_requeued_past_deadline_returns_to_parked(rng):
+    """resume() arms a fresh deadline; if THAT passes while the request
+    is still queued, it falls back to 'parked' (carry stays in the
+    connector, no leak) and a later resume still finishes bit-clean."""
+    engine, server, clock, conn, fe = _spill_frontend(rng)
+    raster = _rasters(rng, (8,), engine.n_inputs)[0]
+    want = np.asarray(engine.run(raster[:, None, :])["spikes"])[:, 0]
+
+    blocker = fe.submit(_rasters(rng, (6,), engine.n_inputs)[0])
+    h = fe.submit(raster, deadline_ms=1_000)
+    fe.pump()                      # blocker holds the only slot
+    assert blocker.state == "running" and h.state == "queued"
+    clock.t = 2.0
+    fe.pump()                      # h expires while QUEUED, never parked
+    assert h.state == "expired"    # no carry existed -> plain refusal
+
+    h2 = fe.submit(raster, deadline_ms=2_000)
+    fe.drain(max_rounds=2)         # blocker finishes; h2 runs a quantum
+    assert h2.state == "running"
+    clock.t = 5.0
+    fe.pump()
+    assert h2.state == "parked"
+    fe.resume(h2, deadline_ms=1_000)
+    clock.t = 99.0                 # fresh deadline passes while queued
+    blocker2 = fe.submit(_rasters(rng, (2,), engine.n_inputs)[0])
+    fe.pump()
+    assert h2.state == "parked" and len(conn) == 1  # back to parked
+    assert fe.resume(h2) is True   # no deadline this time
+    fe.drain()
+    assert blocker2.state == "done" and h2.state == "done"
+    np.testing.assert_array_equal(h2.result()["spikes"], want)
+
+
+def test_resume_under_reject_backpressure_stays_parked(rng):
+    engine, server, clock, conn, fe = _spill_frontend(rng, capacity=1)
+    h = fe.submit(_rasters(rng, (8,), engine.n_inputs)[0], deadline_ms=500)
+    fe.pump()
+    clock.t = 1.0
+    fe.pump()
+    assert h.state == "parked"
+    filler = fe.submit(_rasters(rng, (9,), engine.n_inputs)[0])
+    fe.pump()                      # filler admitted -> queue has room...
+    blocker = fe.submit(_rasters(rng, (9,), engine.n_inputs)[0])
+    assert blocker.state == "queued"
+    assert fe.resume(h) is False   # ...but now it is full again: reject
+    assert h.state == "parked" and len(conn) == 1
+    fe.drain()
+    assert fe.resume(h) is True    # room now; the carry waited it out
+    fe.drain()
+    assert h.state == "done"
+
+
+def test_determinism_extends_over_spill_resume_ops(rng):
+    """The determinism contract extended over detach/attach: with spill
+    and resume in the op sequence, replaying it reproduces identical
+    states, counts, and output bytes."""
+    def run():
+        from repro.serving.connector import InMemoryCarryConnector
+
+        r = np.random.default_rng(13)
+        engine = _engine(np.random.default_rng(5))
+        server = SpikeServer(engine, n_slots=2, chunk_steps=2)
+        clock = VirtualClock()
+        fe = AsyncSpikeFrontend(server, queue_capacity=6, clock=clock,
+                                connector=InMemoryCarryConnector())
+        lengths = (9, 7, 8, 3, 6)
+        # the first two carry tight deadlines (they will spill + resume,
+        # possibly repeatedly); the rest run undisturbed alongside them
+        handles = [fe.submit(rr, deadline_ms=(2_000 if i < 2 else None))
+                   for i, rr in
+                   enumerate(_rasters(r, lengths, engine.n_inputs))]
+        states = []
+        for _ in range(40):
+            if fe.idle and not any(h.state == "parked" for h in handles):
+                break
+            clock.t += 1.1          # every ~2nd quantum crosses a deadline
+            fe.pump()
+            for h in handles:
+                if h.state == "parked":
+                    fe.resume(h, deadline_ms=4_000)
+            states.append(tuple(h.state for h in handles))
+        outs = [None if h.result() is None
+                else h.result()["spikes"].tobytes() for h in handles]
+        return states, outs, dict(fe.counts)
+
+    a, b = run(), run()
+    assert a == b
+    states, outs, counts = a
+    assert counts.get("parked", 0) > 0      # the scenario really spilled
+    assert counts["done"] == 5              # and everyone finished
+    # every raster byte-identical to its never-spilled run
+    r = np.random.default_rng(13)
+    engine = _engine(np.random.default_rng(5))
+    for raster, got in zip(_rasters(r, (9, 7, 8, 3, 6), engine.n_inputs),
+                           outs):
+        want = np.asarray(engine.run(raster[:, None, :])["spikes"])[:, 0]
+        assert got == want.tobytes()
 
 
 # --------------------------------------------------------------------------
