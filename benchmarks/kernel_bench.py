@@ -434,6 +434,63 @@ def bench_migration(backends, *, n_slots: int = 8, chunk_steps: int = 8,
              migration_vs_quantum=round(t_mem / max(t_feed, 1e-9), 4))
 
 
+def bench_obs_overhead(backends, *, n_slots: int = 8, chunk_steps: int = 8,
+                       rounds: int = 6, activity: float = 0.05) -> None:
+    """The observability-overhead axis: telemetry must be ~free.
+
+    Times the SAME serving feed loop twice — bare vs fully instrumented
+    (MetricsRegistry + SpanTracer injected into ``SpikeServer``) — and
+    records the relative overhead. The telemetry layer's hard contract is
+    read-only observation of the datapath (byte-identity is pinned by
+    tests/test_obs_server.py); this bench pins the PRICE: the ISSUE
+    acceptance is < 5% on the reference backend (BENCH_pr8.json).
+    """
+    from repro.obs import MetricsRegistry, SpanTracer
+
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    T = chunk_steps * rounds
+    rasters = [(rng.random((T, n_in)) < activity).astype(np.int32)
+               for _ in range(n_slots)]
+    for backend in backends:
+        engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero",
+                             backend=backend)
+
+        def make_server(telemetry: bool):
+            srv = SpikeServer(
+                engine, n_slots=n_slots, chunk_steps=chunk_steps,
+                metrics=MetricsRegistry() if telemetry else None,
+                tracer=SpanTracer() if telemetry else None)
+            uids = [srv.attach() for _ in range(n_slots)]
+            return srv, uids
+
+        def feed_loop(srv, uids):
+            for t0 in range(0, T, chunk_steps):
+                srv.feed({u: rasters[i][t0:t0 + chunk_steps]
+                          for i, u in enumerate(uids)})
+            return srv.total_steps
+
+        bare, bare_uids = make_server(False)
+        inst, inst_uids = make_server(True)
+        t_bare = time_call(lambda: feed_loop(bare, bare_uids),
+                           warmup=2, iters=7)
+        t_obs = time_call(lambda: feed_loop(inst, inst_uids),
+                          warmup=2, iters=7)
+        overhead = t_obs / t_bare - 1.0
+        emit(f"obs/overhead_{backend}", t_obs / T,
+             f"instrumented {t_obs / T:.1f} vs bare {t_bare / T:.1f} "
+             f"us/timestep ({100 * overhead:+.2f}% with metrics+tracer on, "
+             f"{n_slots} slots x {chunk_steps}-step chunks)",
+             kind="obs_overhead", backend=backend, batch=n_slots,
+             activity=activity,
+             bare_us_per_step=round(t_bare / T, 3),
+             instrumented_us_per_step=round(t_obs / T, 3),
+             overhead_frac=round(overhead, 4),
+             per_timestep=True)
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -468,6 +525,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "size vs the feed quantum a slot runs in that "
                          "time (the byte-identity itself is pinned by "
                          "tests/test_carry_migration.py)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="also benchmark the telemetry layer's cost: the "
+                         "same SpikeServer feed loop bare vs instrumented "
+                         "(MetricsRegistry + SpanTracer), recording the "
+                         "relative overhead — the observability contract "
+                         "is byte-identical outputs and < 5% overhead on "
+                         "the reference backend")
     ap.add_argument("--devices", type=int, default=1,
                     help="also run the engine/streaming benches on a mesh "
                          "over N devices (faked host devices on CPU)")
@@ -545,6 +609,8 @@ def main(argv=None) -> None:
         bench_async_frontend(backends, activity=args.activity)
     if args.migrate:
         bench_migration(backends, activity=args.activity)
+    if args.obs_overhead:
+        bench_obs_overhead(backends, activity=args.activity)
 
     rng = np.random.default_rng(0)
     B, S, P = args.batch, 784 + 1024, 1024
@@ -604,6 +670,7 @@ def main(argv=None) -> None:
                   "backend": args.backend, "streaming": args.streaming,
                   "async": args.async_mode, "sparsity": args.sparsity,
                   "fuse_steps": args.fuse_steps, "migrate": args.migrate,
+                  "obs_overhead": args.obs_overhead,
                   "devices": args.devices, "mesh": args.mesh},
         )
 

@@ -14,6 +14,10 @@ tier-1 too):
      ``repro.launch.serve_snn`` and ``benchmarks/kernel_bench.py``
      (no phantom flags), and every flag those parsers define must be
      documented there (no undocumented flags).
+  3. **Metrics.** docs/observability.md is the metric reference: every
+     backticked ``snn_*`` name it mentions must be registered in
+     ``repro.obs.METRIC_SPECS`` (no phantom metrics), and every spec
+     the registry defines must appear there (no undocumented metrics).
 
 Prints each violation; exit code 0 when clean, 1 otherwise.
 """
@@ -30,11 +34,15 @@ DOC_FILES = [
     "README.md",
     "ARCHITECTURE.md",
     "docs/serving.md",
+    "docs/observability.md",
     "docs/glossary.md",
     "benchmarks/README.md",
 ]
 
 FLAG_DOC = "docs/serving.md"
+METRIC_DOC = "docs/observability.md"
+
+_METRIC_RE = re.compile(r"`(snn_[a-z0-9_]+)`")
 
 # markdown inline links: [text](target) — target up to the first ')' or
 # whitespace (none of our docs use spaces or nested parens in targets)
@@ -162,6 +170,28 @@ def check_flags(doc_text: str, parser_flags: dict[str, set[str]],
     return problems
 
 
+def registry_metric_names(repo: Path = REPO) -> set[str]:
+    """Every metric name the registry catalogue defines."""
+    p = str(repo / "src")
+    if p not in sys.path:
+        sys.path.insert(0, p)
+    from repro.obs import METRIC_SPECS
+    return set(METRIC_SPECS)
+
+
+def check_metrics(doc_text: str, registry_names: set[str],
+                  doc_name: str = METRIC_DOC) -> list[str]:
+    """Two-way metric-name sync between the docs table and the
+    registry catalogue. Fenced code blocks are ignored (exposition
+    examples show derived ``_bucket``/``_sum`` series, not families)."""
+    documented = set(_METRIC_RE.findall(strip_fences(doc_text)))
+    problems = [f"{doc_name}: documents {m}, which the registry does "
+                f"not define" for m in sorted(documented - registry_names)]
+    problems += [f"{doc_name}: registry metric {m} is undocumented"
+                 for m in sorted(registry_names - documented)]
+    return problems
+
+
 def main() -> int:
     problems = check_links()
     flag_doc = REPO / FLAG_DOC
@@ -169,6 +199,12 @@ def main() -> int:
         problems += check_flags(flag_doc.read_text(), parser_flag_sets())
     else:
         problems.append(f"{FLAG_DOC}: flag reference missing")
+    metric_doc = REPO / METRIC_DOC
+    if metric_doc.exists():
+        problems += check_metrics(metric_doc.read_text(),
+                                  registry_metric_names())
+    else:
+        problems.append(f"{METRIC_DOC}: metric reference missing")
     for p in problems:
         print(f"[check-docs] {p}")
     if problems:
@@ -176,7 +212,7 @@ def main() -> int:
         return 1
     n = len(DOC_FILES)
     print(f"[check-docs] OK: {n} docs, links + launcher flag reference "
-          f"all verified")
+          f"+ metric reference all verified")
     return 0
 
 

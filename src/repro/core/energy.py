@@ -33,7 +33,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["TABLE_V", "EnergyModel", "WorkloadCounts"]
+__all__ = ["TABLE_V", "EnergyModel", "WorkloadCounts",
+           "counts_from_registry", "counts_from_run"]
 
 # paper constants ----------------------------------------------------------
 TABLE_V = {
@@ -158,3 +159,27 @@ def counts_from_run(results: dict) -> WorkloadCounts:
         spike_packets=float(np.sum(np.asarray(results.get("row_fetches", 0)))),
         cycles=float(np.sum(np.asarray(results["cycles"]))),
     )
+
+
+def counts_from_registry(registry, *, cycles: float | None = None
+                         ) -> WorkloadCounts:
+    """Build WorkloadCounts from a live instrumented server's registry.
+
+    An instrumented :class:`~repro.serving.snn.SpikeServer` maintains
+    measured ``snn_server_sops_total`` / ``snn_server_row_fetches_total``
+    counters with ``events.trace`` semantics, so the analytic model can
+    price a LIVE serving process the same way it prices an offline run.
+    One spike packet per row fetch, as in :func:`counts_from_run`.
+
+    ``cycles`` defaults to the reference-duty estimate: the calibrated
+    model's SOPs/cycle at the paper's Table-V operating point, i.e. the
+    live workload is priced as if the accelerator sustained the paper's
+    MNIST duty cycle. Pass explicit cycles to price a different duty.
+    """
+    sops = float(registry.counter("snn_server_sops_total").value)
+    rows = float(registry.counter("snn_server_row_fetches_total").value)
+    if cycles is None:
+        per_cycle = EnergyModel.calibrated().reference_rates["sops_per_cycle"]
+        cycles = sops / per_cycle
+    return WorkloadCounts(sops=sops, row_fetches=rows, spike_packets=rows,
+                          cycles=float(cycles))

@@ -57,17 +57,26 @@ class AcceleratorSession:
 
     def __init__(self, config: cerebra_h.CerebraHConfig | None = None,
                  backend: str = "reference", mesh=None,
-                 fuse_steps: int = 1, connector=None):
+                 fuse_steps: int = 1, connector=None,
+                 metrics=None, tracer=None):
         from repro.serving.connector import InMemoryCarryConnector
 
         self.config = config or cerebra_h.CerebraHConfig()
         self.backend = backend
         self.mesh = mesh
+        # optional telemetry, threaded into every server / frontend /
+        # connector this session builds (deploy + redeploy spans recorded
+        # here). Purely observational — see repro.obs.
+        self.metrics = metrics
+        self.tracer = tracer
         # the session's stream-state connector: rolling-redeploy drain
         # parks in-flight carries here (and spill-enabled frontends share
         # it); file-backed connectors survive the process.
         self.connector = (connector if connector is not None
                           else InMemoryCarryConnector())
+        if (metrics is not None or tracer is not None) and hasattr(
+                self.connector, "instrument"):
+            self.connector.instrument(metrics, tracer)
         # {lif signature: [(uid, connector key | None), ...]} — streams
         # parked by deploy(), FIFO restore order, consumed by serve().
         # A None key is a stream that was still waiting for a slot (no
@@ -140,11 +149,18 @@ class AcceleratorSession:
         self.models[name] = model
         self._next_cluster += need
         self._next_input += net.n_inputs
-        self._drain_streams()         # park in-flight carries first —
+        parked = self._drain_streams()  # park in-flight carries first —
         self._fused_engines.clear()   # resident set changed
         self._stream_servers.clear()  # fused layout changed with it
         self._frontends.clear()       # queues die with their servers
         self._serve_epoch += 1        # invalidate outstanding stream views
+        if self.metrics is not None:
+            self.metrics.counter("snn_session_deploys_total").inc()
+            if parked:
+                self.metrics.counter("snn_session_redeploys_total").inc()
+        if self.tracer is not None:
+            self.tracer.event("deploy", name, models=len(self.models),
+                              parked_streams=parked)
         return model
 
     def _drain_streams(self) -> int:
@@ -170,6 +186,8 @@ class AcceleratorSession:
                 self.connector.insert(ckey, server.snapshot_stream(uid))
                 group.append((uid, ckey))
                 parked += 1
+                if self.tracer is not None:
+                    self.tracer.event("redeployed", uid, epoch=epoch)
             for uid in server.scheduler.waiting:
                 group.append((uid, None))
         return parked
@@ -354,7 +372,8 @@ class AcceleratorSession:
                     )
             server = SpikeServer(self._fused_engine(group),
                                  n_slots=n_slots, chunk_steps=chunk_steps,
-                                 gate=gate)
+                                 gate=gate, metrics=self.metrics,
+                                 tracer=self.tracer)
             self._stream_servers[key] = server
             self._restore_parked(sig, server)
         fe = self._frontends.get(key)
@@ -365,7 +384,8 @@ class AcceleratorSession:
                     server, queue_capacity=cfg.queue_capacity,
                     backpressure=cfg.backpressure,
                     deadline_ms=cfg.deadline_ms,
-                    connector=(self.connector if cfg.spill else None))
+                    connector=(self.connector if cfg.spill else None),
+                    metrics=self.metrics, tracer=self.tracer)
                 self._frontends[key] = fe
             elif (fe.queue_capacity, fe.backpressure,
                   fe.default_deadline_ms,

@@ -23,7 +23,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["StragglerDetector", "donor_shards", "rebalance_shards"]
+__all__ = ["StragglerDetector", "donor_shards", "observe_from_registry",
+           "rebalance_shards"]
 
 
 @dataclasses.dataclass
@@ -66,6 +67,30 @@ class StragglerDetector:
             "std": np.sqrt(self._var),
             "strikes": self._strikes.copy(),
         }
+
+
+def observe_from_registry(detector: StragglerDetector, registry,
+                          *, metric: str = "snn_shard_step_seconds"
+                          ) -> np.ndarray:
+    """One detector step driven by the registry's per-shard gauges.
+
+    Reads the most recent ``metric`` gauge value for every shard label
+    ``0..num_hosts-1`` (an instrumented dispatch loop — serve_snn's
+    ShardLoadWatch — sets them each round), feeds the vector to
+    :meth:`StragglerDetector.observe`, and mirrors the resulting flags
+    back into the ``snn_shard_straggler_flagged`` gauges so the flags are
+    exportable alongside the timings. Returns the bool flag mask —
+    identical to calling ``observe`` on the same vector directly (pinned
+    by tests/test_straggler_obs.py)."""
+    fam = registry.gauge(metric)
+    times = np.asarray(
+        [fam.labels(shard=s).value for s in range(detector.num_hosts)],
+        np.float64)
+    flags = detector.observe(times)
+    flag_fam = registry.gauge("snn_shard_straggler_flagged")
+    for shard, f in enumerate(flags):
+        flag_fam.labels(shard=shard).set(int(f))
+    return flags
 
 
 def donor_shards(flagged: np.ndarray) -> np.ndarray:

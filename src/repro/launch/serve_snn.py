@@ -22,19 +22,26 @@ reuse can concentrate live streams on one shard); flagged shards get a
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import jax
 import numpy as np
 
 from repro.core import coding
+from repro.core.energy import EnergyModel, counts_from_registry
 from repro.core.engine import BACKENDS, GATES
 from repro.core.lif import LIFParams
 from repro.core.network import SNNetwork
 from repro.core.session import AcceleratorSession
 from repro.distributed.spike_mesh import (ensure_host_devices,
                                           make_spike_mesh, parse_mesh_spec)
-from repro.distributed.straggler import StragglerDetector, rebalance_shards
+from repro.distributed.straggler import (StragglerDetector,
+                                         observe_from_registry,
+                                         rebalance_shards)
+from repro.obs import MetricsRegistry, SpanTracer, set_registry
+from repro.obs.tracing import profile_trace
 from repro.serving.frontend import BACKPRESSURE, FrontendConfig
 
 
@@ -68,13 +75,19 @@ class ShardLoadWatch:
     # 3-chunk imbalance at admission time should not brand the whole run.
     PERSISTENT_FRACTION = 0.1
 
-    def __init__(self, n_shards: int, n_slots: int):
+    def __init__(self, n_shards: int, n_slots: int, registry=None):
         self.n_shards = int(n_shards)
         self.n_slots = int(n_slots)
         padded = -(-n_slots // n_shards) * n_shards
         self.slots_per_shard = padded // n_shards
         self.detector = StragglerDetector(num_hosts=n_shards,
                                           warmup_steps=3, patience=3)
+        #: optional MetricsRegistry: each dispatch publishes the
+        #: attributed per-shard times as ``snn_shard_step_seconds``
+        #: gauges and the detector step runs THROUGH the registry
+        #: (straggler.observe_from_registry), so the exported timings are
+        #: exactly what the flags were computed from.
+        self.registry = registry
         self.flag_counts = np.zeros(n_shards, np.int64)
         self.chunk_times: list[float] = []
 
@@ -86,53 +99,43 @@ class ShardLoadWatch:
         mean = load.mean()
         attributed = dt * load / mean if mean > 0 else np.full(
             self.n_shards, dt)
-        self.flag_counts += self.detector.observe(attributed)
+        if self.registry is not None:
+            fam = self.registry.gauge("snn_shard_step_seconds")
+            for shard, t in enumerate(attributed):
+                fam.labels(shard=shard).set(float(t))
+            flags = observe_from_registry(self.detector, self.registry)
+        else:
+            flags = self.detector.observe(attributed)
+        self.flag_counts += flags
 
     def persistent_flags(self) -> np.ndarray:
         """Shards flagged persistently enough to act on (bool mask)."""
         return self.flag_counts >= max(
             2, int(self.PERSISTENT_FRACTION * max(len(self.chunk_times), 1)))
 
-    def summary(self) -> list[str]:
+    def report(self) -> dict | None:
+        """Structured straggler-watch summary (None before any dispatch)."""
         if not self.chunk_times:
-            return []
+            return None
         ct = np.asarray(self.chunk_times) * 1e3
-        if self.n_shards <= 1:
-            # unsharded run: no shards to attribute or rebalance — report
-            # the dispatch-time distribution only
-            return [
-                f"[serve-snn] {len(ct)} chunk dispatches: "
-                f"p50 {np.percentile(ct, 50):.1f} ms, "
-                f"p95 {np.percentile(ct, 95):.1f} ms"
-            ]
-        stats = self.detector.stats
-        lines = [
-            f"[serve-snn] straggler watch over {len(ct)} chunk dispatches "
-            f"x {self.n_shards} batch shards: load-attributed step time "
-            f"mean {float(stats['mean'].mean()):.4f}s "
-            f"(dispatch p50 {np.percentile(ct, 50):.1f} ms, "
-            f"p95 {np.percentile(ct, 95):.1f} ms), per-shard flag counts "
-            f"{self.flag_counts.tolist()}"
-        ]
-        persistent = self.persistent_flags()
-        if persistent.any() and not persistent.all():
-            sizes = rebalance_shards(self.n_slots, persistent)
-            lines.append(
-                f"[serve-snn] persistently overloaded shard(s) "
-                f"{np.where(persistent)[0].tolist()} -> suggested slot "
-                f"rebalance {sizes.tolist()} (of {self.n_slots} slots)")
-        elif persistent.all():
-            lines.append(
-                "[serve-snn] all shards flagged together (fleet-wide "
-                "step-time stretch, not a per-shard straggler); slot "
-                "split unchanged "
-                f"{rebalance_shards(self.n_slots, persistent).tolist()}")
-        else:
-            lines.append(
-                "[serve-snn] no persistently overloaded shards; slot "
-                "split stays uniform "
-                f"{rebalance_shards(self.n_slots, persistent).tolist()}")
-        return lines
+        rep = {
+            "dispatches": len(ct),
+            "n_shards": self.n_shards,
+            "dispatch_ms": {"p50": float(np.percentile(ct, 50)),
+                            "p95": float(np.percentile(ct, 95))},
+        }
+        if self.n_shards > 1:
+            persistent = self.persistent_flags()
+            rep.update({
+                "attributed_mean_s": float(self.detector.stats["mean"]
+                                           .mean()),
+                "flag_counts": self.flag_counts.tolist(),
+                "persistent": np.where(persistent)[0].tolist(),
+                "all_flagged": bool(persistent.all()),
+                "suggested_slot_split": rebalance_shards(
+                    self.n_slots, persistent).tolist(),
+            })
+        return rep
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -195,6 +198,22 @@ def build_parser() -> argparse.ArgumentParser:
                          "streams are drained to the connector and "
                          "restored into the new fused server mid-flight "
                          "(byte-identical continuation)")
+    ap.add_argument("--metrics", default=None, metavar="FILE|-",
+                    help="write the run's final Prometheus text exposition "
+                         "(every metric in repro.obs.METRIC_SPECS) to FILE, "
+                         "or '-' for stdout")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export the stream-lifecycle span log (queued -> "
+                         "admitted -> chunk_step -> parked/migrated -> "
+                         "retired) as JSONL to FILE")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the serving loop "
+                         "into DIR, with lifecycle spans mirrored as trace "
+                         "annotations")
+    ap.add_argument("--json-summary", action="store_true",
+                    help="also print the structured run summary as one JSON "
+                         "object (machine-readable run report; same data "
+                         "the human-readable lines are formatted from)")
     ap.add_argument("--n-inputs", type=int, default=24)
     ap.add_argument("--n-neurons", type=int, default=48)
     ap.add_argument("--intensity", type=float, default=0.25,
@@ -213,7 +232,172 @@ def _fmt_lat(stats: dict) -> str:
             f"p95 {stats['p95'] * 1e3:.1f} ms")
 
 
-def run_async(args, server, views, requests, rng) -> None:
+# ---------------------------------------------------------------------
+# Run summary: ONE structured dict built from the registry snapshot (plus
+# the loop's host-side timings), rendered by ONE formatter. The
+# human-readable "[serve-snn] ..." lines and the --json-summary object
+# are two views of the same data — there is no third accounting.
+# ---------------------------------------------------------------------
+def _server_report(registry: MetricsRegistry) -> dict:
+    """The instrumented SpikeServer's measured-work counters."""
+    c = registry.counter
+    ev = c("snn_server_source_events_total")
+    return {
+        "chunks": int(c("snn_server_chunks_total").value),
+        "steps": int(c("snn_server_steps_total").value),
+        "spikes": int(c("snn_server_spikes_total").value),
+        "source_events": {
+            "external": int(ev.labels(kind="external").value),
+            "recurrent": int(ev.labels(kind="recurrent").value),
+        },
+        "sops": int(c("snn_server_sops_total").value),
+        "row_fetches": int(c("snn_server_row_fetches_total").value),
+        "weight_blocks": {
+            "fetched": int(c("snn_server_weight_blocks_fetched_total")
+                           .value),
+            "dense": int(c("snn_server_weight_blocks_dense_total").value),
+        },
+    }
+
+
+def _energy_report(registry: MetricsRegistry) -> dict | None:
+    """Price the live run with the Table-V-calibrated model (None until
+    the server has measured any SOPs)."""
+    counts = counts_from_registry(registry)
+    if counts.sops == 0:
+        return None
+    model = EnergyModel.calibrated()
+    return {
+        "sops": counts.sops,
+        "row_fetches": counts.row_fetches,
+        "cycles_ref_duty": counts.cycles,
+        "breakdown_mw": model.breakdown_mw(counts),
+        "energy_uj": model.energy_uj(counts),
+    }
+
+
+def _render_summary(s: dict) -> list[str]:
+    """The human-readable lines for a run-summary dict."""
+    lines = []
+    if s["mode"] == "async":
+        fe, c = s["frontend"], s["frontend"]["counts"]
+        lines.append(
+            f"[serve-snn] async front door: {s['requests']} requests "
+            f"offered open-loop at {s['offered_rate_per_s']:.1f}/s "
+            f"(policy={s['policy']}, queue capacity {s['queue_capacity']}, "
+            f"deadline {s['deadline_ms']} ms), served in "
+            f"{s['wall_s']:.2f}s over {fe['rounds']} pump rounds")
+        lines.append(
+            f"[serve-snn] outcomes: {c['done']} done, {c['rejected']} "
+            f"rejected, {c['dropped']} dropped, {c['expired']} expired "
+            f"({c['expired_queued']} queued / {c['expired_running']} "
+            f"mid-stream), {c['cancelled']} cancelled; {s['steps']} "
+            f"stream-timesteps -> {s['steps_per_s']:.0f} steps/s")
+        if c["parked"]:
+            lines.append(
+                f"[serve-snn] spill-on-evict: {c['parked']} mid-stream "
+                f"expiries parked their carry in the connector, "
+                f"{c['resumed']} resumed bit-clean (one retry each)")
+        lines.append(
+            f"[serve-snn] queue depth: max {fe['queue_depth']['max']}, "
+            f"mean {fe['queue_depth']['mean']:.1f} "
+            f"(capacity {s['queue_capacity']})")
+        lines.append(f"[serve-snn] queue-wait: {_fmt_lat(fe['queue_wait'])}")
+        lines.append(f"[serve-snn] service:    {_fmt_lat(fe['service'])}")
+        lines.append(f"[serve-snn] total:      {_fmt_lat(fe['total'])}")
+    else:
+        lines.append(
+            f"[serve-snn] {s['streams_done']} streams, {s['steps']} "
+            f"stream-timesteps in {s['wall_s']:.2f}s over {s['rounds']} "
+            f"rounds -> {s['steps_per_s']:.0f} steps/s")
+        lat = s["stream_latency_ms"]
+        if lat is not None:
+            lines.append(
+                f"[serve-snn] per-stream latency: mean {lat['mean']:.1f} "
+                f"ms, p50 {lat['p50']:.1f} ms, p95 {lat['p95']:.1f} ms "
+                f"(queueing under {s['n_slots']} slots)")
+        lines.extend(_render_straggler(s["straggler"], s["n_slots"]))
+        sp, eg = s["sparsity"], s["event_gate"]
+        lines.append(
+            f"[serve-snn] stream spike sparsity: input mean "
+            f"{sp['input_mean_pct']:.2f}% (p50 {sp['input_p50_pct']:.2f}%), "
+            f"output mean {sp['output_mean_pct']:.2f}%")
+        lines.append(
+            f"[serve-snn] event gate on served rasters: per-example "
+            f"{eg['gated']}/{eg['dense']} weight blocks "
+            f"({100 * eg['gated'] / eg['dense']:.1f}% of dense -> "
+            f"{eg['dense'] / max(eg['gated'], 1):.1f}x traffic reduction; "
+            f"batch-tile OR fetches "
+            f"{100 * eg['tiled'] / eg['tiled_dense']:.1f}% of its dense)"
+            + (f" [serving gate: {eg['serving_gate']}]"
+               if eg["serving_gate"] else ""))
+    en = s.get("energy")
+    if en is not None:
+        bk, uj = en["breakdown_mw"], en["energy_uj"]
+        lines.append(
+            f"[serve-snn] live energy (Table-V reference duty): "
+            f"{en['sops']:.0f} measured SOPs, {en['row_fetches']:.0f} row "
+            f"fetches -> {uj['total_uj']:.1f} uJ at {bk['total_mw']:.0f} mW "
+            f"avg ({bk['weight_memory_pct']:.1f}% weight memory)")
+    return lines
+
+
+def _render_straggler(rep: dict | None, n_slots: int) -> list[str]:
+    if rep is None:
+        return []
+    d = rep["dispatch_ms"]
+    if rep["n_shards"] <= 1:
+        # unsharded run: no shards to attribute or rebalance — report
+        # the dispatch-time distribution only
+        return [
+            f"[serve-snn] {rep['dispatches']} chunk dispatches: "
+            f"p50 {d['p50']:.1f} ms, p95 {d['p95']:.1f} ms"
+        ]
+    lines = [
+        f"[serve-snn] straggler watch over {rep['dispatches']} chunk "
+        f"dispatches x {rep['n_shards']} batch shards: load-attributed "
+        f"step time mean {rep['attributed_mean_s']:.4f}s "
+        f"(dispatch p50 {d['p50']:.1f} ms, p95 {d['p95']:.1f} ms), "
+        f"per-shard flag counts {rep['flag_counts']}"
+    ]
+    if rep["persistent"] and not rep["all_flagged"]:
+        lines.append(
+            f"[serve-snn] persistently overloaded shard(s) "
+            f"{rep['persistent']} -> suggested slot rebalance "
+            f"{rep['suggested_slot_split']} (of {n_slots} slots)")
+    elif rep["all_flagged"]:
+        lines.append(
+            "[serve-snn] all shards flagged together (fleet-wide "
+            "step-time stretch, not a per-shard straggler); slot "
+            f"split unchanged {rep['suggested_slot_split']}")
+    else:
+        lines.append(
+            "[serve-snn] no persistently overloaded shards; slot "
+            f"split stays uniform {rep['suggested_slot_split']}")
+    return lines
+
+
+def emit_summary(args, summary: dict, metrics: MetricsRegistry,
+                 tracer: SpanTracer) -> None:
+    """The single summary emitter: render the structured summary, then
+    honor --json-summary / --metrics / --trace."""
+    for line in _render_summary(summary):
+        print(line)
+    if args.json_summary:
+        print(json.dumps(summary, indent=2, sort_keys=True, default=float))
+    if args.metrics is not None:
+        text = metrics.to_prometheus()
+        if args.metrics == "-":
+            sys.stdout.write(text)
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(text)
+    if args.trace is not None:
+        n = tracer.export_jsonl(args.trace)
+        print(f"[serve-snn] wrote {n} lifecycle spans to {args.trace}")
+
+
+def run_async(args, server, views, requests, rng, metrics) -> dict:
     """Open-loop async serving: arrivals on the wall clock, not the loop.
 
     Requests are submitted at precomputed Poisson arrival TIMES (rate =
@@ -266,32 +450,21 @@ def run_async(args, server, views, requests, rng) -> None:
         fe.pump()
     wall = time.perf_counter() - t0
 
-    m = fe.metrics()
-    c = m["counts"]
     steps = server.total_steps
-    offered = len(requests) / arrive_at[-1]
-    print(f"[serve-snn] async front door: {len(requests)} requests offered "
-          f"open-loop at {offered:.1f}/s (policy={args.backpressure}, "
-          f"queue capacity {fe.queue_capacity}, deadline "
-          f"{args.deadline_ms} ms), served in {wall:.2f}s over "
-          f"{m['rounds']} pump rounds")
-    print(f"[serve-snn] outcomes: {c.get('done', 0)} done, "
-          f"{c.get('rejected', 0)} rejected, {c.get('dropped', 0)} "
-          f"dropped, {c.get('expired', 0)} expired "
-          f"({c.get('expired_queued', 0)} queued / "
-          f"{c.get('expired_running', 0)} mid-stream), "
-          f"{c.get('cancelled', 0)} cancelled; "
-          f"{steps} stream-timesteps -> {steps / wall:.0f} steps/s")
-    if c.get("parked", 0):
-        print(f"[serve-snn] spill-on-evict: {c['parked']} mid-stream "
-              f"expiries parked their carry in the connector, "
-              f"{c.get('resumed', 0)} resumed bit-clean (one retry each)")
-    print(f"[serve-snn] queue depth: max {m['queue_depth']['max']}, "
-          f"mean {m['queue_depth']['mean']:.1f} "
-          f"(capacity {fe.queue_capacity})")
-    print(f"[serve-snn] queue-wait: {_fmt_lat(m['queue_wait'])}")
-    print(f"[serve-snn] service:    {_fmt_lat(m['service'])}")
-    print(f"[serve-snn] total:      {_fmt_lat(m['total'])}")
+    return {
+        "mode": "async",
+        "requests": len(requests),
+        "offered_rate_per_s": len(requests) / arrive_at[-1],
+        "policy": args.backpressure,
+        "queue_capacity": fe.queue_capacity,
+        "deadline_ms": args.deadline_ms,
+        "wall_s": wall,
+        "steps": int(steps),
+        "steps_per_s": steps / wall,
+        "frontend": fe.metrics(),
+        "server": _server_report(metrics),
+        "energy": _energy_report(metrics),
+    }
 
 
 def main(argv=None) -> None:
@@ -326,9 +499,16 @@ def main(argv=None) -> None:
     if args.connector is not None:
         from repro.serving.connector import FileCarryConnector
         connector = FileCarryConnector(args.connector)
+    # one registry + tracer for the whole run: the session threads them
+    # through the server, frontend, and connector it builds. Also
+    # installed as the process-wide default so tools can export it.
+    metrics = MetricsRegistry()
+    tracer = SpanTracer(annotate=args.profile is not None)
+    set_registry(metrics)
     sess = AcceleratorSession(backend=args.backend, mesh=mesh,
                               fuse_steps=args.fuse_steps,
-                              connector=connector)
+                              connector=connector,
+                              metrics=metrics, tracer=tracer)
     names = [f"snn{i}" for i in range(args.models)]
     for name in names:
         sess.deploy(name, make_net(rng, args.n_inputs, args.n_neurons))
@@ -358,7 +538,7 @@ def main(argv=None) -> None:
           f"{server.engine.n_phys} neurons), backend={args.backend}, "
           f"{args.n_slots} slots x {args.chunk}-step chunks{mesh_note}")
 
-    watch = ShardLoadWatch(n_shards, args.n_slots)
+    watch = ShardLoadWatch(n_shards, args.n_slots, registry=metrics)
 
     # synthetic request plan: stream i -> (model, Poisson-encoded stimulus)
     key = jax.random.key(args.seed)
@@ -373,7 +553,9 @@ def main(argv=None) -> None:
         requests.append((uid, name, spikes))
 
     if args.async_mode:
-        run_async(args, server, views, requests, rng)
+        with profile_trace(args.profile):
+            summary = run_async(args, server, views, requests, rng, metrics)
+        emit_summary(args, summary, metrics, tracer)
         return
 
     # Poisson arrivals: number of new requests per chunk-round
@@ -390,6 +572,8 @@ def main(argv=None) -> None:
     t_done: dict = {}
     rebalanced = False
     steps_base = 0            # stream-timesteps served by drained servers
+    profile_ctx = profile_trace(args.profile)
+    profile_ctx.__enter__()
     t0 = time.perf_counter()
     round_i = 0
     while arrivals or live or server.scheduler.waiting:
@@ -459,17 +643,10 @@ def main(argv=None) -> None:
             t_done[uid] = time.perf_counter()
         round_i += 1
     wall = time.perf_counter() - t0
+    profile_ctx.__exit__(None, None, None)
 
     lats = np.asarray([t_done[u] - t_arrive[u] for u in t_done])
     steps = steps_base + server.total_steps
-    print(f"[serve-snn] {len(t_done)} streams, {steps} stream-timesteps in "
-          f"{wall:.2f}s over {round_i} rounds -> {steps / wall:.0f} steps/s")
-    print(f"[serve-snn] per-stream latency: mean {lats.mean() * 1e3:.1f} ms, "
-          f"p50 {np.percentile(lats, 50) * 1e3:.1f} ms, "
-          f"p95 {np.percentile(lats, 95) * 1e3:.1f} ms "
-          f"(queueing under {args.n_slots} slots)")
-    for line in watch.summary():
-        print(line)
 
     # event accounting over the streams actually served: per-stream spike
     # sparsity, and the weight-block traffic the event gate would fetch
@@ -488,16 +665,35 @@ def main(argv=None) -> None:
     sources = np.asarray(sources_raster(ext_stack, out_stack))
     gated, dense = block_traffic(sources, tile_batch=1)
     tiled, tiled_dense = block_traffic(sources, tile_batch=8)
-    print(f"[serve-snn] stream spike sparsity: input mean "
-          f"{100 * in_sp.mean():.2f}% (p50 "
-          f"{100 * np.percentile(in_sp, 50):.2f}%), output mean "
-          f"{100 * out_sp.mean():.2f}%")
-    print(f"[serve-snn] event gate on served rasters: per-example "
-          f"{gated}/{dense} weight blocks ({100 * gated / dense:.1f}% of "
-          f"dense -> {dense / max(gated, 1):.1f}x traffic reduction; "
-          f"batch-tile OR fetches {100 * tiled / tiled_dense:.1f}% of its "
-          f"dense)"
-          + (f" [serving gate: {args.gate}]" if args.gate else ""))
+
+    summary = {
+        "mode": "sync",
+        "streams_done": len(t_done),
+        "steps": int(steps),
+        "wall_s": wall,
+        "rounds": round_i,
+        "steps_per_s": steps / wall,
+        "n_slots": args.n_slots,
+        "stream_latency_ms": None if not len(lats) else {
+            "mean": float(lats.mean() * 1e3),
+            "p50": float(np.percentile(lats, 50) * 1e3),
+            "p95": float(np.percentile(lats, 95) * 1e3),
+        },
+        "straggler": watch.report(),
+        "sparsity": {
+            "input_mean_pct": float(100 * in_sp.mean()),
+            "input_p50_pct": float(100 * np.percentile(in_sp, 50)),
+            "output_mean_pct": float(100 * out_sp.mean()),
+        },
+        "event_gate": {
+            "gated": int(gated), "dense": int(dense),
+            "tiled": int(tiled), "tiled_dense": int(tiled_dense),
+            "serving_gate": args.gate,
+        },
+        "server": _server_report(metrics),
+        "energy": _energy_report(metrics),
+    }
+    emit_summary(args, summary, metrics, tracer)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Observability layer: metrics registry + stream-lifecycle tracing.
+
+The serving stack's telemetry lives here, in two halves:
+
+- :mod:`repro.obs.metrics` — a process-wide but injectable
+  :class:`MetricsRegistry` of counters, gauges, and fixed-bucket
+  histograms with label sets, exportable as Prometheus text exposition
+  or a JSON snapshot. ``METRIC_SPECS`` is the canonical catalogue of
+  every metric the serving stack emits.
+- :mod:`repro.obs.tracing` — a :class:`SpanTracer` recording typed
+  stream-lifecycle spans (queued → admitted → chunk_step×N →
+  parked/migrated/redeployed → retired) with JSONL export and optional
+  ``jax.profiler`` trace annotations.
+
+The hard contract of this package: observability READS the datapath and
+never changes it. Every instrument hook is a pure host-side read of
+values the serving layer already computes; the byte-identity suites
+(async==sync, migration, fused steps) run with telemetry enabled to
+prove it.
+"""
+
+from repro.obs.metrics import (
+    METRIC_SPECS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    set_registry,
+)
+from repro.obs.tracing import Span, SpanTracer
+
+__all__ = [
+    "METRIC_SPECS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "SpanTracer",
+    "get_registry",
+    "set_registry",
+]

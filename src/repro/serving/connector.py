@@ -247,7 +247,43 @@ class CarryConnectorBase:
     silently resolve to state for an incompatible engine. Implementations
     store the serialized blob: every select round-trips the wire format,
     so a corrupted store raises at select, not at step time.
+
+    :meth:`instrument` opts a connector into telemetry: every insert
+    (op=``snapshot``) and hit select (op=``restore``) counts ops, blob
+    bytes, and latency into the registry and records a span. Pure
+    accounting around the store — the stored bytes are untouched.
     """
+
+    metrics = None
+    tracer = None
+
+    def instrument(self, metrics=None, tracer=None) -> "CarryConnectorBase":
+        """Attach a MetricsRegistry / SpanTracer; returns self."""
+        self.metrics = metrics
+        self.tracer = tracer
+        return self
+
+    def _obs_clock(self):
+        if self.metrics is not None:
+            return self.metrics.clock
+        if self.tracer is not None:
+            return self.tracer.clock
+        return None
+
+    def _obs_op(self, op: str, stream_id, nbytes: int, t0: float) -> None:
+        clock = self._obs_clock()
+        now = clock()
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("snn_connector_ops_total").labels(op=op).inc()
+            m.counter("snn_connector_bytes_total").labels(op=op).inc(nbytes)
+            m.histogram("snn_connector_op_seconds").labels(
+                op=op).observe(now - t0)
+        if self.tracer is not None:
+            from repro.obs.tracing import Span
+
+            self.tracer._record(
+                Span(op, stream_id, t0, now, {"nbytes": nbytes}))
 
     def insert(self, stream_id, snapshot: CarrySnapshot) -> None:
         """Park (or overwrite) a stream's snapshot under ``stream_id``."""
@@ -288,17 +324,25 @@ class InMemoryCarryConnector(CarryConnectorBase):
         self._store: dict = {}   # key token -> (stream_id, blob)
 
     def insert(self, stream_id, snapshot: CarrySnapshot) -> None:
-        self._store[_key_token(stream_id)] = (stream_id,
-                                              snapshot.to_bytes())
+        clock = self._obs_clock()
+        t0 = clock() if clock else 0.0
+        blob = snapshot.to_bytes()
+        self._store[_key_token(stream_id)] = (stream_id, blob)
+        if clock:
+            self._obs_op("snapshot", stream_id, len(blob), t0)
 
     def select(self, stream_id, slot_params: dict | None = None
                ) -> CarrySnapshot | None:
+        clock = self._obs_clock()
+        t0 = clock() if clock else 0.0
         hit = self._store.get(_key_token(stream_id))
         if hit is None:
             return None
         snap = CarrySnapshot.from_bytes(hit[1])
         if slot_params is not None:
             snap.check_compatible(slot_params)
+        if clock:
+            self._obs_op("restore", stream_id, len(hit[1]), t0)
         return snap
 
     def evict(self, stream_id) -> bool:
@@ -328,21 +372,31 @@ class FileCarryConnector(CarryConnectorBase):
         return os.path.join(self.root, _key_token(stream_id) + self.SUFFIX)
 
     def insert(self, stream_id, snapshot: CarrySnapshot) -> None:
+        clock = self._obs_clock()
+        t0 = clock() if clock else 0.0
         path = self._path(stream_id)
         tmp = path + ".tmp"
+        blob = snapshot.to_bytes()
         with open(tmp, "wb") as f:
-            f.write(snapshot.to_bytes())
+            f.write(blob)
         os.replace(tmp, path)
+        if clock:
+            self._obs_op("snapshot", stream_id, len(blob), t0)
 
     def select(self, stream_id, slot_params: dict | None = None
                ) -> CarrySnapshot | None:
+        clock = self._obs_clock()
+        t0 = clock() if clock else 0.0
         path = self._path(stream_id)
         if not os.path.exists(path):
             return None
         with open(path, "rb") as f:
-            snap = CarrySnapshot.from_bytes(f.read())
+            blob = f.read()
+        snap = CarrySnapshot.from_bytes(blob)
         if slot_params is not None:
             snap.check_compatible(slot_params)
+        if clock:
+            self._obs_op("restore", stream_id, len(blob), t0)
         return snap
 
     def evict(self, stream_id) -> bool:
@@ -396,9 +450,23 @@ def migrate_stream(server, uid, *, slot: int) -> int:
         raise ValueError(f"stream {uid!r} is waiting; nothing to migrate")
     if slot == old:
         return old
+    metrics = getattr(server, "metrics", None)
+    tracer = getattr(server, "tracer", None)
+    clock = (metrics.clock if metrics is not None
+             else tracer.clock if tracer is not None else None)
+    t0 = clock() if clock else 0.0
     snap = server.snapshot_stream(uid)
     server.detach(uid)
     server.attach_stream(snap, uid=uid, slot=slot)
+    if metrics is not None:
+        nbytes = sum(a.nbytes for a in snap.arrays.values())
+        metrics.counter("snn_connector_ops_total").labels(op="migrate").inc()
+        metrics.counter("snn_connector_bytes_total").labels(
+            op="migrate").inc(nbytes)
+        metrics.histogram("snn_connector_op_seconds").labels(
+            op="migrate").observe(clock() - t0)
+    if tracer is not None:
+        tracer.event("migrated", uid, from_slot=old, to_slot=slot)
     return old
 
 

@@ -86,6 +86,15 @@ _METRICS_WINDOW = 100_000
 # per-process frontend ids, namespacing spill keys in a shared connector
 _FRONTEND_IDS = itertools.count()
 
+# every outcome key `metrics()["counts"]` documents. The dict ALWAYS
+# carries all of them (zeros included): an empty or all-expired run
+# returns the same shape as a busy one, so dashboards and tests index
+# keys without existence checks (pinned by tests/test_serving_frontend).
+OUTCOME_KEYS: tuple[str, ...] = (
+    "submitted", "done", "rejected", "dropped", "cancelled",
+    "expired", "expired_queued", "expired_running", "parked", "resumed",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class FrontendConfig:
@@ -214,7 +223,8 @@ class AsyncSpikeFrontend:
     def __init__(self, server, *, queue_capacity: int = 32,
                  backpressure: str = "reject",
                  deadline_ms: float | None = None,
-                 clock=time.perf_counter, connector=None):
+                 clock=time.perf_counter, connector=None,
+                 metrics=None, tracer=None):
         if queue_capacity <= 0:
             raise ValueError(
                 f"queue_capacity must be positive, got {queue_capacity}")
@@ -236,6 +246,12 @@ class AsyncSpikeFrontend:
         #: namespaced per frontend so several front doors (and the
         #: session's redeploy drain) can share one connector.
         self.connector = connector
+        #: optional telemetry (a MetricsRegistry / SpanTracer). Outcome
+        #: counts, queue depth, and latency histograms mirror into the
+        #: registry — exportable while the run is live — without changing
+        #: one value `metrics()` reports. Pure host-side accounting.
+        self.registry = metrics
+        self.tracer = tracer
         self._spill_ns = f"spill-{next(_FRONTEND_IDS)}"
         self._lock = threading.RLock()
         self._rid = itertools.count()
@@ -269,6 +285,37 @@ class AsyncSpikeFrontend:
         """True when no request is queued or running."""
         with self._lock:
             return not self._queue and not self._running
+
+    # -- telemetry ---------------------------------------------------------
+    # Mirrors of the plain-dict accounting into the injected registry /
+    # tracer. All no-ops when telemetry is off; never touch the server.
+    def _count(self, outcome: str, n: int = 1) -> None:
+        self.counts[outcome] += n
+        if self.registry is not None:
+            self.registry.counter("snn_frontend_requests_total").labels(
+                outcome=outcome).inc(n)
+
+    def _obs_depth(self) -> None:
+        if self.registry is not None:
+            self.registry.gauge("snn_frontend_queue_depth").set(
+                len(self._queue))
+
+    @staticmethod
+    def _class_of(req: _Request) -> str:
+        """Latency-histogram label: the view (model) name, or "default"
+        for raw server-wide requests."""
+        return req.view.name if req.view is not None else "default"
+
+    def _obs_latency(self, name: str, req: _Request,
+                     seconds: float) -> None:
+        if self.registry is not None:
+            self.registry.histogram(name).labels(
+                stream_class=self._class_of(req)).observe(seconds)
+
+    def _obs_retired(self, req: _Request, outcome: str) -> None:
+        if self.tracer is not None:
+            self.tracer.event("retired", req.rid, outcome=outcome,
+                              steps_done=req.cursor)
 
     # -- submission --------------------------------------------------------
     def submit(self, chunk, *, view=None, deadline_ms: float | None = None,
@@ -322,12 +369,18 @@ class AsyncSpikeFrontend:
                 events_capacity=events_capacity,
                 events_policy=events_policy,
             )
-            self.counts["submitted"] += 1
+            self._count("submitted")
+            if self.tracer is not None:
+                self.tracer.event("queued", req.rid,
+                                  steps=req.steps_total,
+                                  stream_class=self._class_of(req))
             if not self._make_room():
                 req.state = "rejected"
-                self.counts["rejected"] += 1
+                self._count("rejected")
+                self._obs_retired(req, "rejected")
                 return RequestHandle(self, req)
             self._queue.append(req)
+            self._obs_depth()
             return RequestHandle(self, req)
 
     def submit_events(self, stream, **kwargs) -> RequestHandle:
@@ -358,21 +411,25 @@ class AsyncSpikeFrontend:
                     self.connector.evict(req.parked_key)
                     req.parked_key = None
                 req.state = "cancelled"
-                self.counts["cancelled"] += 1
+                self._count("cancelled")
+                self._obs_retired(req, "cancelled")
+                self._obs_depth()
                 return True
             if req.state == "parked":
                 self.connector.evict(req.parked_key)
                 req.parked_key = None
                 req.state = "cancelled"
                 req.finished_at = self.clock()
-                self.counts["cancelled"] += 1
+                self._count("cancelled")
+                self._obs_retired(req, "cancelled")
                 return True
             if req.state == "running":
                 self.server.detach(req.uid)
                 del self._running[req.uid]
                 req.state = "cancelled"
                 req.finished_at = self.clock()
-                self.counts["cancelled"] += 1
+                self._count("cancelled")
+                self._obs_retired(req, "cancelled")
                 return True
             return False
 
@@ -396,6 +453,7 @@ class AsyncSpikeFrontend:
                             else now + deadline_ms / 1e3)
             req.state = "queued"
             self._queue.append(req)
+            self._obs_depth()
             return True
 
     def _make_room(self) -> bool:
@@ -408,7 +466,8 @@ class AsyncSpikeFrontend:
         if self.backpressure == "drop-oldest":
             oldest = self._queue.popleft()
             oldest.state = "dropped"
-            self.counts["dropped"] += 1
+            self._count("dropped")
+            self._obs_retired(oldest, "dropped")
             return True
         while len(self._queue) >= self.queue_capacity:  # "block"
             progress = self.pump()
@@ -442,10 +501,13 @@ class AsyncSpikeFrontend:
                 self._queue.remove(req)
                 if req.parked_key is not None:
                     req.state = "parked"
+                    if self.tracer is not None:
+                        self.tracer.event("parked", req.rid)
                 else:
                     req.state = "expired"
-                    self.counts["expired_queued"] += 1
-                self.counts["expired"] += 1
+                    self._count("expired_queued")
+                    self._obs_retired(req, "expired")
+                self._count("expired")
                 summary["expired"] += 1
             # ... mid-stream streams are evicted like any other eviction:
             # detach zeroes the slot carry, so the next occupant powers
@@ -464,13 +526,17 @@ class AsyncSpikeFrontend:
                     self.connector.insert(req.parked_key, snap)
                     req.uid = None
                     req.state = "parked"
-                    self.counts["parked"] += 1
+                    self._count("parked")
+                    if self.tracer is not None:
+                        self.tracer.event("parked", req.rid,
+                                          steps_done=req.cursor)
                 else:
                     self.server.detach(uid)
                     req.state = "expired"
                     req.finished_at = now
-                    self.counts["expired"] += 1
-                    self.counts["expired_running"] += 1
+                    self._count("expired")
+                    self._count("expired_running")
+                    self._obs_retired(req, "expired")
                 summary["expired"] += 1
             # 2. continuous-batching admission: queue head -> free slots
             # (a resumed request re-attaches FROM its parked carry — the
@@ -482,13 +548,18 @@ class AsyncSpikeFrontend:
                     req.uid = self.server.attach_stream(snap)
                     self.connector.evict(req.parked_key)
                     req.parked_key = None
-                    self.counts["resumed"] += 1
+                    self._count("resumed")
+                    if self.tracer is not None:
+                        self.tracer.event("resumed", req.rid,
+                                          uid=req.uid)
                 else:
                     req.uid = self.server.attach()
                 req.admitted_at = now
                 req.state = "running"
                 self._running[req.uid] = req
                 self.queue_wait.append(now - req.submitted_at)
+                self._obs_latency("snn_frontend_queue_wait_seconds",
+                                  req, now - req.submitted_at)
                 summary["admitted"] += 1
             # 3. one service quantum for every running stream, batched
             inputs = {}
@@ -512,12 +583,20 @@ class AsyncSpikeFrontend:
                 self.server.detach(uid)
                 req.state = "done"
                 req.finished_at = now
-                self.counts["done"] += 1
+                self._count("done")
                 self.service.append(now - req.admitted_at)
                 self.total.append(now - req.submitted_at)
+                self._obs_latency("snn_frontend_service_seconds",
+                                  req, now - req.admitted_at)
+                self._obs_latency("snn_frontend_total_seconds",
+                                  req, now - req.submitted_at)
+                self._obs_retired(req, "done")
                 summary["retired"] += 1
             self.rounds += 1
             self.depth_samples.append(len(self._queue))
+            if self.registry is not None:
+                self.registry.counter("snn_frontend_rounds_total").inc()
+                self._obs_depth()
             summary["queue_depth"] = len(self._queue)
             return summary
 
@@ -537,11 +616,22 @@ class AsyncSpikeFrontend:
     def metrics(self) -> dict:
         """Front-door accounting: terminal-state counts, queue-wait /
         service / total latency percentiles (seconds), and queue-depth
-        stats over the pump rounds so far."""
+        stats over the pump rounds so far.
+
+        Shape contract: ``counts`` carries EVERY key in
+        :data:`OUTCOME_KEYS` (zero when nothing reached that outcome) and
+        every other key is always present — an empty or all-expired run
+        returns the same structure as a busy one, so callers index
+        without existence checks. Percentile fields are None (not
+        missing) when no sample exists."""
         with self._lock:
             depth = np.asarray(self.depth_samples or [0])
+            counts = {k: int(self.counts.get(k, 0)) for k in OUTCOME_KEYS}
+            # ad-hoc outcomes (none today) must never be silently dropped
+            counts.update({k: int(v) for k, v in self.counts.items()
+                           if k not in counts})
             return {
-                "counts": dict(self.counts),
+                "counts": counts,
                 "queue_wait": latency_percentiles(self.queue_wait),
                 "service": latency_percentiles(self.service),
                 "total": latency_percentiles(self.total),

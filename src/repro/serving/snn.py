@@ -44,6 +44,10 @@ from repro.core.engine import SpikeEngine
 
 __all__ = ["SlotScheduler", "SpikeServer", "ModelStream", "StreamStats"]
 
+# Source-block granularity the measured-traffic counters account at —
+# the kernels' block_src (one weight block per 128 source rows).
+_OBS_BLOCK_SRC = 128
+
 
 class SlotScheduler:
     """Fixed-slot admission bookkeeping (no array state).
@@ -199,11 +203,21 @@ class SpikeServer:
     per step. ``chunk_steps`` need NOT be K-aligned — the engine pads the
     window remainder with inactive steps under the same masked-slot
     contract that pads ragged chunks, so outputs stay byte-identical.
+
+    ``metrics`` / ``tracer`` (a
+    :class:`~repro.obs.metrics.MetricsRegistry` / an
+    :class:`~repro.obs.tracing.SpanTracer`) opt the server into
+    telemetry: per-chunk latency, slot occupancy, and measured
+    SOP/weight-traffic counters (docs/observability.md tables the
+    names). Instrumentation is a pure host-side read of arrays ``feed``
+    already materializes — it NEVER runs inside the scan, so the
+    byte-exactness contract is untouched; with both left ``None`` the
+    datapath does zero extra work.
     """
 
     def __init__(self, engine: SpikeEngine, *, n_slots: int = 8,
                  chunk_steps: int = 8, mesh=None, gate: str | None = None,
-                 fuse_steps: int | None = None):
+                 fuse_steps: int | None = None, metrics=None, tracer=None):
         if chunk_steps <= 0:
             raise ValueError(f"chunk_steps must be positive, got {chunk_steps}")
         if gate is not None:
@@ -220,6 +234,95 @@ class SpikeServer:
         self.streams: dict = {}      # uid -> StreamStats (active + waiting)
         self._auto_uid = itertools.count()
         self.total_steps = 0         # slot-timesteps consumed (all streams)
+        self.metrics = metrics
+        self.tracer = tracer
+        self._prev_host = None       # (n_slots, n_phys) recurrent mirror
+        if metrics is not None:
+            from repro.core.energy import SOPS_PER_ROW
+
+            w = np.asarray(engine.weights_raw)
+            # per-source accounting vectors (trace.py semantics): real
+            # nonzero fanout, and nonzero SOPS_PER_ROW-wide row segments
+            self._fanout = np.count_nonzero(w, axis=1).astype(np.int64)
+            pad = (-w.shape[1]) % SOPS_PER_ROW
+            wp = np.pad(w, ((0, 0), (0, pad))) if pad else w
+            self._rowseg = (
+                (wp.reshape(w.shape[0], -1, SOPS_PER_ROW) != 0)
+                .any(axis=2).sum(axis=1).astype(np.int64))
+            self._n_src_blocks = -(-engine.n_sources // _OBS_BLOCK_SRC)
+            self._prev_host = np.zeros(
+                (self.n_slots, engine.n_phys), np.int32)
+            metrics.gauge("snn_server_slots_total").set(self.n_slots)
+            metrics.gauge("snn_server_slots_occupied").set(0)
+
+    # -- observability ----------------------------------------------------
+    def _obs_clock(self):
+        if self.metrics is not None:
+            return self.metrics.clock
+        return self.tracer.clock
+
+    def _obs_occupancy(self) -> None:
+        if self.metrics is not None:
+            self.metrics.gauge("snn_server_slots_occupied").set(
+                len(self.scheduler.active))
+
+    def _obs_count_chunk(self, ext_u: np.ndarray, out_u: np.ndarray,
+                         prev_row: np.ndarray) -> np.ndarray:
+        """Measured-event accounting for one stream's slice of a chunk
+        dispatch: count source events, SOPs (events x real fanout), row
+        fetches, and per-example-gate weight-block traffic, exactly as
+        :func:`repro.events.trace.trace_run` would measure the same
+        rasters. Returns the stream's new recurrent row. Host-side only."""
+        m = self.metrics
+        prev_u = np.concatenate([prev_row[None, :], out_u[:-1]], axis=0)
+        src = np.concatenate([ext_u, prev_u], axis=1) != 0  # (n, S)
+        m.counter("snn_server_source_events_total").labels(
+            kind="external").inc(int(np.count_nonzero(ext_u)))
+        m.counter("snn_server_source_events_total").labels(
+            kind="recurrent").inc(int(np.count_nonzero(prev_u)))
+        per_src = src.sum(axis=0, dtype=np.int64)  # (S,) event counts
+        m.counter("snn_server_sops_total").inc(int(per_src @ self._fanout))
+        m.counter("snn_server_row_fetches_total").inc(
+            int(per_src @ self._rowseg))
+        n, S = src.shape
+        pad = self._n_src_blocks * _OBS_BLOCK_SRC - S
+        if pad:
+            src = np.pad(src, ((0, 0), (0, pad)))
+        touched = int(src.reshape(n, self._n_src_blocks, _OBS_BLOCK_SRC)
+                      .any(axis=2).sum())
+        m.counter("snn_server_weight_blocks_fetched_total").inc(touched)
+        m.counter("snn_server_weight_blocks_dense_total").inc(
+            n * self._n_src_blocks)
+        return out_u[-1]
+
+    def _obs_feed_chunk(self, t_start: float, active: np.ndarray,
+                        spikes: np.ndarray, chunks: dict, t0: int) -> None:
+        """Record one chunk dispatch: latency + step/spike counters, a
+        chunk_step span, and per-stream measured-event accounting."""
+        from repro.obs.tracing import Span
+
+        dt = self._obs_clock()() - t_start
+        n_active = int(active.sum())
+        if self.tracer is not None:
+            now = self.tracer.clock()
+            # duration span timed by the caller (clock read bracketed the
+            # dispatch; recording it here keeps the hot loop branch-free)
+            self.tracer._record(Span(
+                "chunk_step", None, now - dt, now,
+                {"steps": n_active, "streams": len(chunks)}))
+        if self.metrics is None:
+            return
+        m = self.metrics
+        m.histogram("snn_server_chunk_latency_seconds").observe(dt)
+        m.counter("snn_server_chunks_total").inc()
+        m.counter("snn_server_steps_total").inc(n_active)
+        m.counter("snn_server_spikes_total").inc(int(spikes.sum()))
+        for uid, (slot, arr) in chunks.items():
+            n = min(self.chunk_steps, arr.shape[0] - t0)
+            if n > 0:
+                self._prev_host[slot] = self._obs_count_chunk(
+                    arr[t0:t0 + n], spikes[:n, slot],
+                    self._prev_host[slot])
 
     # -- lifecycle --------------------------------------------------------
     def attach(self, uid=None):
@@ -235,6 +338,12 @@ class SpikeServer:
         if slot is not None:
             st.admitted_at = now
         self.streams[uid] = st
+        self._obs_occupancy()
+        if self.tracer is not None:
+            if slot is None:
+                self.tracer.event("queued", uid)
+            else:
+                self.tracer.event("admitted", uid, slot=slot)
         return uid
 
     def detach(self, uid) -> StreamStats:
@@ -244,14 +353,20 @@ class SpikeServer:
         st = self.streams.pop(uid)
         if self.scheduler.slot_of(uid) is None:
             self.scheduler.cancel(uid)
+            self._obs_occupancy()
             return st
         slot, admitted = self.scheduler.release(uid)
         self.carry = {
             "v": self.carry["v"].at[slot].set(0),
             "spikes": self.carry["spikes"].at[slot].set(0),
         }
+        if self._prev_host is not None:
+            self._prev_host[slot] = 0
         if admitted is not None:
             self.streams[admitted].admitted_at = time.perf_counter()
+            if self.tracer is not None:
+                self.tracer.event("admitted", admitted, slot=slot)
+        self._obs_occupancy()
         return st
 
     def slot_of(self, uid) -> int | None:
@@ -354,6 +469,12 @@ class SpikeServer:
             spike_count=int(snap.meta.get("spike_count", 0)),
             attached_at=now, admitted_at=now,
         )
+        if self._prev_host is not None:
+            self._prev_host[slot] = np.asarray(
+                snap.arrays["spikes"], np.int32)
+        self._obs_occupancy()
+        if self.tracer is not None:
+            self.tracer.event("admitted", uid, slot=slot, resumed=True)
         if connector is not None:
             connector.evict(uid)
         return uid
@@ -427,6 +548,7 @@ class SpikeServer:
         T_max = max(arr.shape[0] for _, arr in chunks.values())
         n_in = self.engine.n_inputs
         pieces: dict = {uid: [] for uid in chunks}
+        obs = self.metrics is not None or self.tracer is not None
         for t0 in range(0, T_max, self.chunk_steps):
             ext = np.zeros((self.chunk_steps, self.n_slots, n_in), np.int32)
             active = np.zeros((self.chunk_steps, self.n_slots), np.int32)
@@ -436,10 +558,13 @@ class SpikeServer:
                     continue
                 ext[:n, slot] = arr[t0:t0 + n]
                 active[:n, slot] = 1
+            t_chunk = self._obs_clock()() if obs else 0.0
             self.carry, spikes = self.engine.step_chunk(
                 self.carry, jnp.asarray(ext), jnp.asarray(active))
             spikes = np.asarray(spikes)
             self.total_steps += int(active.sum())
+            if obs:
+                self._obs_feed_chunk(t_chunk, active, spikes, chunks, t0)
             for uid, (slot, arr) in chunks.items():
                 n = min(self.chunk_steps, arr.shape[0] - t0)
                 if n > 0:
@@ -525,6 +650,15 @@ class SpikeServer:
                 self.carry, jnp.asarray(ext), active)
             self.total_steps += 1
             spikes_t = np.asarray(spikes)[0, slot]
+            if self.metrics is not None:
+                m = self.metrics
+                m.counter("snn_server_chunks_total").inc()
+                m.counter("snn_server_steps_total").inc(1)
+                m.counter("snn_server_spikes_total").inc(
+                    int(spikes_t.sum()))
+                self._prev_host[slot] = self._obs_count_chunk(
+                    ext_t[None, :], spikes_t[None, :],
+                    self._prev_host[slot])
             rows.append(spikes_t)
             if t + 1 < num_steps:
                 ext_t = np.asarray(controller(spikes_t), np.int32)

@@ -21,8 +21,9 @@ _spec.loader.exec_module(check_docs)
 
 
 def test_required_docs_exist():
-    for rel in ("README.md", "docs/serving.md", "docs/glossary.md",
-                "benchmarks/README.md", "ARCHITECTURE.md"):
+    for rel in ("README.md", "docs/serving.md", "docs/observability.md",
+                "docs/glossary.md", "benchmarks/README.md",
+                "ARCHITECTURE.md"):
         assert (REPO / rel).exists(), f"{rel} is part of the doc suite"
 
 
@@ -39,6 +40,24 @@ def test_flag_reference_in_sync():
     assert "--async" in parser_flags["benchmarks/kernel_bench.py"]
     doc = (REPO / "docs" / "serving.md").read_text()
     assert check_docs.check_flags(doc, parser_flags) == []
+
+
+def test_metric_reference_in_sync():
+    names = check_docs.registry_metric_names()
+    assert "snn_server_sops_total" in names  # the live-energy unit
+    doc = (REPO / "docs" / "observability.md").read_text()
+    assert check_docs.check_metrics(doc, names) == []
+
+
+def test_checker_detects_phantom_and_undocumented_metrics():
+    problems = check_docs.check_metrics(
+        "`snn_real_total` and `snn_made_up_total`\n"
+        "```\nsnn_fenced_total 1\n```\n",
+        {"snn_real_total", "snn_hidden_total"})
+    assert any("snn_made_up_total" in p and "does not define" in p
+               for p in problems)
+    assert any("snn_hidden_total is undocumented" in p for p in problems)
+    assert not any("snn_fenced_total" in p for p in problems)
 
 
 def test_checker_detects_dead_link(tmp_path):

@@ -1,0 +1,154 @@
+"""Metrics-registry contracts: instruments, label families, exporters.
+
+The registry is the single accounting substrate for the serving stack, so
+its semantics are pinned tightly: counters are monotone, gauges are
+point-in-time, histograms keep exact bucket/sum/count AND a rolling raw
+window, label families key children by label values, the injectable clock
+drives ``timer()``, and both exporters (Prometheus text exposition, JSON
+snapshot) carry every registered metric name even before traffic arrives
+— the CI observability smoke relies on that last property.
+"""
+
+import json
+
+import pytest
+
+from repro.obs import METRIC_SPECS, MetricsRegistry, get_registry, \
+    set_registry
+from repro.obs.metrics import LATENCY_BUCKETS, MetricSpec
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_counter_inc_and_negative_rejected():
+    reg = MetricsRegistry()
+    c = reg.counter("snn_server_steps_total")
+    c.inc()
+    c.inc(41)
+    assert c.value == 42
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    reg = MetricsRegistry()
+    g = reg.gauge("snn_frontend_queue_depth")
+    g.set(7)
+    g.inc(2)
+    g.dec()
+    assert g.value == 8
+
+
+def test_histogram_buckets_sum_count_and_samples():
+    reg = MetricsRegistry()
+    h = reg.histogram("snn_server_chunk_latency_seconds")
+    for v in (5e-5, 2e-4, 0.3, 99.0):
+        h.observe(v)
+    child = h.labels() if h.spec.labels else h._require_default()
+    assert child.count == 4
+    assert child.sum == pytest.approx(5e-5 + 2e-4 + 0.3 + 99.0)
+    # 99.0 overflows every finite bucket -> +Inf slot
+    assert child.bucket_counts[-1] == 1
+    assert list(child.samples) == [5e-5, 2e-4, 0.3, 99.0]
+
+
+def test_label_families_key_children_independently():
+    reg = MetricsRegistry()
+    fam = reg.counter("snn_frontend_requests_total")
+    fam.labels(outcome="done").inc(3)
+    fam.labels(outcome="rejected").inc()
+    assert fam.labels(outcome="done").value == 3
+    assert fam.labels(outcome="rejected").value == 1
+    # an unlabeled use of a labeled family is a bug, not a default child
+    with pytest.raises(ValueError):
+        fam.inc()
+    with pytest.raises(ValueError):
+        fam.labels(outcome="a", extra="b")
+
+
+def test_kind_and_registration_errors():
+    reg = MetricsRegistry()
+    with pytest.raises(KeyError):
+        reg.counter("no_such_metric")
+    with pytest.raises(TypeError):
+        reg.counter("snn_frontend_queue_depth")  # it is a gauge
+    # same-spec re-registration is idempotent; conflicting spec raises
+    spec = METRIC_SPECS["snn_server_steps_total"]
+    assert reg.register(spec) is reg.counter("snn_server_steps_total")
+    with pytest.raises(ValueError):
+        reg.register(MetricSpec(spec.name, "gauge", "different"))
+
+
+def test_injectable_clock_drives_timer():
+    clk = FakeClock()
+    reg = MetricsRegistry(clock=clk)
+    with reg.timer("snn_server_chunk_latency_seconds"):
+        clk.t += 0.25
+    child = reg.histogram("snn_server_chunk_latency_seconds") \
+        ._require_default()
+    assert child.count == 1
+    assert child.sum == pytest.approx(0.25)
+    with reg.timer("snn_connector_op_seconds", op="snapshot"):
+        clk.t += 1.5
+    labeled = reg.histogram("snn_connector_op_seconds").labels(op="snapshot")
+    assert labeled.sum == pytest.approx(1.5)
+
+
+def test_prometheus_exposition_contains_every_documented_name():
+    reg = MetricsRegistry()
+    text = reg.to_prometheus()
+    for name, spec in METRIC_SPECS.items():
+        assert f"# HELP {name} " in text
+        assert f"# TYPE {name} {spec.kind}" in text
+
+
+def test_prometheus_histogram_lines_are_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("snn_server_chunk_latency_seconds")
+    h.observe(LATENCY_BUCKETS[0] / 2)   # first bucket
+    h.observe(LATENCY_BUCKETS[0] / 2)
+    h.observe(LATENCY_BUCKETS[2])       # third bucket
+    lines = [ln for ln in reg.to_prometheus().splitlines()
+             if ln.startswith("snn_server_chunk_latency_seconds")]
+    buckets = [ln for ln in lines if "_bucket{" in ln]
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in buckets]
+    assert counts == sorted(counts), "le buckets must be cumulative"
+    assert counts[0] == 2 and counts[-1] == 3
+    assert any(ln.startswith("snn_server_chunk_latency_seconds_sum ")
+               for ln in lines)
+    assert any(ln.startswith("snn_server_chunk_latency_seconds_count 3")
+               for ln in lines)
+
+
+def test_snapshot_is_json_able_and_complete():
+    reg = MetricsRegistry()
+    reg.counter("snn_server_sops_total").inc(123)
+    reg.counter("snn_server_source_events_total").labels(
+        kind="external").inc(9)
+    snap = json.loads(json.dumps(reg.snapshot()))
+    assert set(snap) == set(METRIC_SPECS)
+    assert snap["snn_server_sops_total"]["samples"][0]["value"] == 123
+    ev = snap["snn_server_source_events_total"]["samples"]
+    assert ev == [{"labels": {"kind": "external"}, "value": 9}]
+    hist = snap["snn_server_chunk_latency_seconds"]
+    assert hist["type"] == "histogram"
+    assert "+Inf" in hist["samples"][0]["buckets"]
+
+
+def test_registries_are_isolated_and_global_is_swappable():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("snn_server_steps_total").inc(5)
+    assert b.counter("snn_server_steps_total").value == 0
+    prev = set_registry(a)
+    try:
+        assert get_registry() is a
+        assert set_registry(b) is a
+        assert get_registry() is b
+    finally:
+        set_registry(prev)

@@ -1,0 +1,273 @@
+"""The telemetry layer's hard contract, end to end.
+
+1. Observability READS the datapath and never changes it: a fully
+   instrumented stack (server + frontend + connector + session) produces
+   byte-identical spikes to a bare one, including across migration.
+2. What it reads is TRUE: the server's measured-SOP / source-event /
+   weight-block counters must equal the offline ``events.trace``
+   accounting on the very same rasters — streaming accounting and batch
+   accounting are one semantics.
+3. The counters feed the energy model: ``counts_from_registry`` prices a
+   live server with the same ``WorkloadCounts`` contract as offline runs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.energy import EnergyModel, counts_from_registry
+from repro.core.engine import DecaySpec, SpikeEngine, sources_raster
+from repro.core.session import AcceleratorSession
+from repro.events.trace import block_traffic, trace_run
+from repro.obs import MetricsRegistry, SpanTracer
+from repro.serving.connector import InMemoryCarryConnector, migrate_stream
+from repro.serving.frontend import AsyncSpikeFrontend
+from repro.serving.snn import SpikeServer
+
+from conftest import make_random_net
+
+THRESH = 1 << 16
+
+
+def make_engine(rng, n_in=12, n_neurons=32, density=0.3, backend="reference"):
+    import jax.numpy as jnp
+
+    W = (rng.random((n_in + n_neurons, n_neurons)) < density) * \
+        rng.integers(-2**10, 2**10, (n_in + n_neurons, n_neurons))
+    return SpikeEngine(jnp.asarray(W, jnp.int32), n_in,
+                       decay=DecaySpec.shift(0.25), threshold_raw=THRESH,
+                       reset_mode="zero", backend=backend)
+
+
+def rasters(rng, n, T, n_in, p=0.3):
+    return [(rng.random((T, n_in)) < p).astype(np.int32) for _ in range(n)]
+
+
+def feed_all(server, uids, chunks, chunk_steps):
+    T = chunks[0].shape[0]
+    outs = {u: [] for u in uids}
+    for t0 in range(0, T, chunk_steps):
+        res = server.feed({u: chunks[i][t0:t0 + chunk_steps]
+                           for i, u in enumerate(uids)})
+        for u, r in res.items():
+            outs[u].append(r["spikes"])
+    return {u: np.concatenate(v, axis=0) for u, v in outs.items()}
+
+
+def test_instrumented_feed_is_byte_identical():
+    rng = np.random.default_rng(0)
+    engine = make_engine(rng)
+    chunks = rasters(rng, 3, 16, engine.n_inputs)
+
+    bare = SpikeServer(engine, n_slots=4, chunk_steps=4)
+    inst = SpikeServer(engine, n_slots=4, chunk_steps=4,
+                       metrics=MetricsRegistry(), tracer=SpanTracer())
+    uids_b = [bare.attach(f"s{i}") for i in range(3)]
+    uids_i = [inst.attach(f"s{i}") for i in range(3)]
+    out_b = feed_all(bare, uids_b, chunks, 4)
+    out_i = feed_all(inst, uids_i, chunks, 4)
+    for u in uids_b:
+        np.testing.assert_array_equal(out_b[u], out_i[u])
+
+
+def test_server_counters_match_offline_trace_exactly():
+    rng = np.random.default_rng(1)
+    engine = make_engine(rng)
+    n_streams, T, chunk_steps = 3, 16, 4
+    chunks = rasters(rng, n_streams, T, engine.n_inputs)
+
+    reg = MetricsRegistry()
+    server = SpikeServer(engine, n_slots=n_streams, chunk_steps=chunk_steps,
+                         metrics=reg)
+    uids = [server.attach(f"s{i}") for i in range(n_streams)]
+    outs = feed_all(server, uids, chunks, chunk_steps)
+
+    # the offline accounting on the same rasters (streams as batch lanes)
+    ext = np.stack(chunks, axis=1)
+    out = np.stack([outs[u] for u in uids], axis=1)
+    rep = trace_run(engine, ext, out)
+
+    c = reg.counter
+    assert c("snn_server_steps_total").value == T * n_streams
+    assert c("snn_server_chunks_total").value == T // chunk_steps
+    assert c("snn_server_spikes_total").value == int(out.sum())
+    assert c("snn_server_sops_total").value == rep.measured_sops
+    ev = c("snn_server_source_events_total")
+    assert (ev.labels(kind="external").value
+            + ev.labels(kind="recurrent").value) == rep.source_events
+    assert ev.labels(kind="external").value == int(
+        (np.asarray(ext) != 0).sum())
+
+    # per-example gate traffic: same block_traffic call trace.py uses
+    sources = np.asarray(sources_raster(ext, out))
+    touched, dense = block_traffic(sources, tile_batch=1)
+    assert c("snn_server_weight_blocks_fetched_total").value == touched
+    assert c("snn_server_weight_blocks_dense_total").value == dense
+
+    hist = reg.histogram("snn_server_chunk_latency_seconds") \
+        ._require_default()
+    assert hist.count == T // chunk_steps
+
+
+def test_counters_survive_partial_occupancy_and_ragged_chunks():
+    rng = np.random.default_rng(2)
+    engine = make_engine(rng)
+    reg = MetricsRegistry()
+    server = SpikeServer(engine, n_slots=4, chunk_steps=4, metrics=reg)
+    uid = server.attach("only")
+    # ragged: 6 steps through a 4-step chunk server -> chunks of 4 and 2
+    raster = (rng.random((6, engine.n_inputs)) < 0.4).astype(np.int32)
+    out = np.concatenate([
+        server.feed({uid: raster[:4]})[uid]["spikes"],
+        server.feed({uid: raster[4:]})[uid]["spikes"],
+    ], axis=0)
+    rep = trace_run(engine, raster[:, None, :], out[:, None, :])
+    c = reg.counter
+    assert c("snn_server_steps_total").value == 6
+    assert c("snn_server_sops_total").value == rep.measured_sops
+    assert c("snn_server_spikes_total").value == int(out.sum())
+
+
+def test_migration_preserves_bytes_and_counts_ops():
+    rng = np.random.default_rng(3)
+    engine = make_engine(rng)
+    chunks = rasters(rng, 2, 8, engine.n_inputs)
+
+    # bare run for the expected bytes
+    bare = SpikeServer(engine, n_slots=4, chunk_steps=4)
+    uids = [bare.attach(f"s{i}") for i in range(2)]
+    expect = feed_all(bare, uids, chunks, 4)
+
+    reg, tr = MetricsRegistry(), SpanTracer()
+    server = SpikeServer(engine, n_slots=4, chunk_steps=4,
+                         metrics=reg, tracer=tr)
+    for i in range(2):
+        server.attach(f"s{i}")
+    first = {u: server.feed({u: chunks[i][:4]})[u]["spikes"]
+             for i, u in enumerate(("s0", "s1"))}
+    # mid-flight slot migration (snapshot -> detach -> attach_stream)
+    migrate_stream(server, "s0", slot=3)
+    migrate_stream(server, "s1", slot=2)
+    second = {u: server.feed({u: chunks[i][4:]})[u]["spikes"]
+              for i, u in enumerate(("s0", "s1"))}
+    for i, u in enumerate(("s0", "s1")):
+        np.testing.assert_array_equal(
+            np.concatenate([first[u], second[u]], axis=0), expect[u])
+
+    ops = reg.counter("snn_connector_ops_total")
+    assert ops.labels(op="migrate").value == 2
+    assert reg.counter("snn_connector_bytes_total") \
+        .labels(op="migrate").value > 0
+    hist = reg.histogram("snn_connector_op_seconds").labels(op="migrate")
+    assert hist.count == 2
+    moved = [s for s in tr.spans if s.kind == "migrated"]
+    assert [(s.uid, s.attrs["from_slot"], s.attrs["to_slot"])
+            for s in moved] == [("s0", 0, 3), ("s1", 1, 2)]
+
+
+def test_connector_insert_select_count_ops_and_bytes():
+    rng = np.random.default_rng(4)
+    engine = make_engine(rng)
+    reg = MetricsRegistry()
+    server = SpikeServer(engine, n_slots=2, chunk_steps=4, metrics=reg)
+    uid = server.attach("s0")
+    server.feed({uid: rasters(rng, 1, 4, engine.n_inputs)[0]})
+    conn = InMemoryCarryConnector().instrument(reg)
+    snap = server.snapshot_stream(uid)
+    conn.insert("k", snap)
+    assert conn.select("k") is not None
+    assert conn.select("missing") is None  # miss: no restore recorded
+    ops = reg.counter("snn_connector_ops_total")
+    assert ops.labels(op="snapshot").value == 1
+    assert ops.labels(op="restore").value == 1
+    nbytes = reg.counter("snn_connector_bytes_total")
+    assert nbytes.labels(op="snapshot").value == len(snap.to_bytes())
+    assert nbytes.labels(op="snapshot").value == \
+        nbytes.labels(op="restore").value
+
+
+def test_session_deploy_counters_and_spans():
+    rng = np.random.default_rng(5)
+    reg, tr = MetricsRegistry(), SpanTracer()
+    sess = AcceleratorSession(metrics=reg, tracer=tr)
+    sess.deploy("a", make_random_net(rng))
+    view = sess.serve("a", n_slots=2, chunk_steps=4)
+    uid = view.attach("live")
+    view.feed(uid, (rng.random((4, 20)) < 0.3).astype(np.int32))
+    sess.deploy("b", make_random_net(rng))  # drains the live stream
+    assert reg.counter("snn_session_deploys_total").value == 2
+    assert reg.counter("snn_session_redeploys_total").value == 1
+    kinds = [s.kind for s in tr.spans]
+    assert kinds.count("deploy") == 2
+    assert "redeployed" in kinds
+
+
+def test_frontend_telemetry_mirrors_counts():
+    rng = np.random.default_rng(6)
+    engine = make_engine(rng)
+    reg, tr = MetricsRegistry(), SpanTracer()
+    server = SpikeServer(engine, n_slots=2, chunk_steps=4)
+    fe = AsyncSpikeFrontend(server, queue_capacity=2, metrics=reg,
+                            tracer=tr)
+    for r in rasters(rng, 2, 8, engine.n_inputs):
+        fe.submit(r)
+    fe.drain()
+    m = fe.metrics()
+    req = reg.counter("snn_frontend_requests_total")
+    assert req.labels(outcome="submitted").value == m["counts"]["submitted"]
+    assert req.labels(outcome="done").value == m["counts"]["done"] == 2
+    assert reg.counter("snn_frontend_rounds_total").value == m["rounds"]
+    assert reg.gauge("snn_frontend_queue_depth").value == 0
+    done = reg.histogram("snn_frontend_total_seconds") \
+        .labels(stream_class="default")
+    assert done.count == 2
+    retired = [s for s in tr.spans if s.kind == "retired"]
+    assert [s.attrs["outcome"] for s in retired] == ["done", "done"]
+
+
+def test_counts_from_registry_prices_the_live_run():
+    rng = np.random.default_rng(7)
+    engine = make_engine(rng)
+    reg = MetricsRegistry()
+    server = SpikeServer(engine, n_slots=2, chunk_steps=4, metrics=reg)
+    uids = [server.attach(f"s{i}") for i in range(2)]
+    feed_all(server, uids, rasters(rng, 2, 8, engine.n_inputs), 4)
+
+    counts = counts_from_registry(reg)
+    assert counts.sops == reg.counter("snn_server_sops_total").value > 0
+    assert counts.row_fetches == \
+        reg.counter("snn_server_row_fetches_total").value > 0
+    assert counts.spike_packets == counts.row_fetches
+    # reference-duty cycles: sops at the calibrated model's SOPs/cycle
+    per_cycle = EnergyModel.calibrated().reference_rates["sops_per_cycle"]
+    assert counts.cycles == pytest.approx(counts.sops / per_cycle)
+    bk = EnergyModel.calibrated().breakdown_mw(counts)
+    assert bk["total_mw"] > 0
+    # explicit cycles override
+    assert counts_from_registry(reg, cycles=123.0).cycles == 123.0
+
+
+def test_closed_loop_counters_match_trace():
+    rng = np.random.default_rng(8)
+    engine = make_engine(rng)
+    reg = MetricsRegistry()
+    server = SpikeServer(engine, n_slots=2, chunk_steps=4, metrics=reg)
+    uid = server.attach("loop")
+    ext0 = (rng.random(engine.n_inputs) < 0.5).astype(np.int32)
+
+    fed = []  # the ext rasters the controller actually injected
+
+    def controller(spikes_t):
+        nxt = (rng.random(engine.n_inputs) < 0.3).astype(np.int32)
+        fed.append(nxt)
+        return nxt
+
+    res = server.run_closed_loop(uid, controller, 6, ext0)
+    assert reg.counter("snn_server_steps_total").value == 6
+    assert reg.counter("snn_server_spikes_total").value == \
+        int(res["spikes"].sum())
+    # SOPs agree with the offline trace on the realized ext/out sequence
+    # (step t's ext is ext0 for t=0, then what the controller returned)
+    ext_seq = np.stack([ext0] + fed[:5], axis=0)
+    rep = trace_run(engine, ext_seq[:, None, :],
+                    np.asarray(res["spikes"])[:, None, :])
+    assert reg.counter("snn_server_sops_total").value == rep.measured_sops

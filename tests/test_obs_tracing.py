@@ -1,0 +1,105 @@
+"""SpanTracer contracts: typed kinds, events vs durations, JSONL export.
+
+The tracer is the lifecycle half of the telemetry layer: every span kind
+an instrumentation site may record is catalogued in ``SPAN_KINDS`` (a
+typo'd kind raises instead of minting an undocumented type), events are
+instantaneous (t1 == t0), duration spans measure the injected clock, and
+the JSONL export round-trips span-per-line with stable keys.
+"""
+
+import io
+import json
+
+import pytest
+
+from repro.obs.tracing import SPAN_KINDS, Span, SpanTracer
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_unknown_kind_rejected():
+    tr = SpanTracer()
+    with pytest.raises(ValueError):
+        tr.event("chunk_stepp")
+    with pytest.raises(ValueError):
+        with tr.span("not-a-kind"):
+            pass
+    assert tr.spans == []
+
+
+def test_every_catalogued_kind_records():
+    tr = SpanTracer(clock=FakeClock())
+    for kind in SPAN_KINDS:
+        tr.event(kind, uid=1)
+    assert [s.kind for s in tr.spans] == list(SPAN_KINDS)
+
+
+def test_event_is_instantaneous_and_carries_attrs():
+    clk = FakeClock(5.0)
+    tr = SpanTracer(clock=clk)
+    s = tr.event("admitted", uid=7, slot=3)
+    assert (s.t0, s.t1, s.duration) == (5.0, 5.0, 0.0)
+    assert s.attrs == {"slot": 3}
+
+
+def test_duration_span_measures_clock_and_keeps_body_attrs():
+    clk = FakeClock()
+    tr = SpanTracer(clock=clk)
+    with tr.span("chunk_step", uid="stream-0") as attrs:
+        clk.t += 0.125
+        attrs["steps"] = 8
+    (s,) = tr.spans
+    assert s.duration == pytest.approx(0.125)
+    assert s.attrs == {"steps": 8}
+    # recorded even when the body raises (the finally path)
+    with pytest.raises(RuntimeError):
+        with tr.span("snapshot", uid="stream-0"):
+            clk.t += 1.0
+            raise RuntimeError("boom")
+    assert len(tr.spans) == 2 and tr.spans[1].duration == pytest.approx(1.0)
+
+
+def test_spans_for_filters_by_uid():
+    tr = SpanTracer(clock=FakeClock())
+    tr.event("queued", uid=1)
+    tr.event("queued", uid=2)
+    tr.event("retired", uid=1, outcome="done")
+    assert [s.kind for s in tr.spans_for(1)] == ["queued", "retired"]
+
+
+def test_jsonl_export_roundtrip(tmp_path):
+    clk = FakeClock()
+    tr = SpanTracer(clock=clk)
+    tr.event("queued", uid=0, steps=16)
+    with tr.span("chunk_step", uid=0):
+        clk.t += 0.5
+    path = tmp_path / "trace.jsonl"
+    assert tr.export_jsonl(path) == 2
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert rows == tr.to_dicts()
+    assert set(rows[0]) == {"kind", "uid", "t0", "t1", "dur", "attrs"}
+    assert rows[1]["dur"] == pytest.approx(0.5)
+    # file-object export too
+    buf = io.StringIO()
+    assert tr.export_jsonl(buf) == 2
+    assert buf.getvalue().count("\n") == 2
+
+
+def test_sink_streams_spans_through():
+    buf = io.StringIO()
+    tr = SpanTracer(clock=FakeClock(), sink=buf)
+    tr.event("parked", uid=4)
+    line = buf.getvalue().strip()
+    assert json.loads(line)["kind"] == "parked"
+
+
+def test_span_dataclass_duration():
+    s = Span("deploy", None, 1.0, 3.5, {})
+    assert s.duration == 2.5
+    assert s.to_dict()["dur"] == 2.5

@@ -357,7 +357,7 @@ def test_spill_resume_bit_clean(rng):
     assert len(conn) == 0          # admission consumed the parked carry
     c = fe.metrics()["counts"]
     assert (c["parked"], c["resumed"], c["done"]) == (1, 1, 1)
-    assert "expired_running" not in c
+    assert c["expired_running"] == 0  # documented keys are always present
 
 
 def test_spill_interleaves_with_other_traffic(rng):
@@ -577,3 +577,49 @@ def test_latency_percentiles_shapes():
     assert latency_percentiles([])["p50"] is None
     p = latency_percentiles([1.0, 2.0, 3.0])
     assert p["p50"] == 2.0 and p["max"] == 3.0
+
+
+# --------------------------------------------------------------------------
+# metrics() shape contract: every documented key, always (PR 8 satellite)
+# --------------------------------------------------------------------------
+
+def test_metrics_shape_on_empty_run(rng):
+    """A frontend that never saw a request still returns every documented
+    key with well-defined zeros — no KeyErrors, no missing outcomes."""
+    from repro.serving.frontend import OUTCOME_KEYS
+
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    fe = AsyncSpikeFrontend(server, queue_capacity=1)
+    m = fe.metrics()
+    assert set(m) == {"counts", "queue_wait", "service", "total",
+                      "queue_depth", "rounds"}
+    assert m["counts"] == {k: 0 for k in OUTCOME_KEYS}
+    for section in ("queue_wait", "service", "total"):
+        assert m[section] == {"mean": None, "p50": None, "p95": None,
+                              "max": None}
+    assert m["queue_depth"] == {"max": 0, "mean": 0.0}
+    assert m["rounds"] == 0
+
+
+def test_metrics_shape_on_all_expired_run(rng):
+    """An all-expired run (nothing ever retired cleanly) keeps the same
+    shape: zero 'done', None service/total percentiles, every key there."""
+    from repro.serving.frontend import OUTCOME_KEYS
+
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    clock = VirtualClock()
+    fe = AsyncSpikeFrontend(server, queue_capacity=4, clock=clock)
+    handles = [fe.submit(r, deadline_ms=1_000)
+               for r in _rasters(rng, (4, 4), engine.n_inputs)]
+    clock.t = 2.0           # every deadline passed before any admission
+    fe.pump()
+    assert all(h.state == "expired" for h in handles)
+    m = fe.metrics()
+    assert set(m["counts"]) == set(OUTCOME_KEYS)
+    assert m["counts"]["done"] == 0
+    assert m["counts"]["expired"] == 2
+    assert m["counts"]["expired_queued"] == 2
+    assert m["service"]["p50"] is None and m["total"]["p50"] is None
+    assert m["rounds"] == 1
