@@ -8,6 +8,11 @@ import time
 
 import jax
 
+from repro.bench_schema import AXIS_DEFAULTS, SCHEMA_VERSION
+
+__all__ = ["AXIS_DEFAULTS", "SCHEMA_VERSION", "emit", "start_recording",
+           "time_call", "write_json"]
+
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall microseconds per call (after jit warmup)."""
@@ -27,25 +32,9 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 # in-memory record list that write_json() dumps as a BENCH_*.json — the
 # repo's perf trajectory across PRs.
 #
-# SCHEMA_VERSION history (stamped into every document's metadata):
-#   1  implicit axes: records carried only the fields their bench passed,
-#      so consumers had to existence-check every axis (a record with the
-#      default gate simply had no "gate" key).
-#   2  every record carries ALL of AXIS_DEFAULTS unconditionally — absent
-#      axes are filled with their defaults at emit() time, so grouping by
-#      (backend, gate, batch, devices, fuse_steps) never KeyErrors.
-SCHEMA_VERSION = 2
-
-# The cross-bench axes and the value a record has when its bench did not
-# set one ("gate": None = not an engine record / gate not applicable;
-# "devices": 1 = single device; "fuse_steps": 1 = unfused kernels).
-AXIS_DEFAULTS: dict = {
-    "backend": None,
-    "gate": None,
-    "batch": None,
-    "devices": 1,
-    "fuse_steps": 1,
-}
+# SCHEMA_VERSION and AXIS_DEFAULTS live in repro.bench_schema (re-imported
+# above) so serve_snn — which runs with PYTHONPATH=src only — can stamp
+# the same schema + axes into its --json-summary meta block.
 
 _records: list[dict] | None = None
 

@@ -435,15 +435,18 @@ def bench_migration(backends, *, n_slots: int = 8, chunk_steps: int = 8,
 
 
 def bench_obs_overhead(backends, *, n_slots: int = 8, chunk_steps: int = 8,
-                       rounds: int = 6, activity: float = 0.05) -> None:
+                       rounds: int = 6, activity: float = 0.05,
+                       budget: float = 0.05) -> None:
     """The observability-overhead axis: telemetry must be ~free.
 
     Times the SAME serving feed loop twice — bare vs fully instrumented
     (MetricsRegistry + SpanTracer injected into ``SpikeServer``) — and
     records the relative overhead. The telemetry layer's hard contract is
     read-only observation of the datapath (byte-identity is pinned by
-    tests/test_obs_server.py); this bench pins the PRICE: the ISSUE
-    acceptance is < 5% on the reference backend (BENCH_pr8.json).
+    tests/test_obs_server.py); this bench pins the PRICE and ENFORCES it:
+    on the reference backend (the contract backend — interpreted Pallas
+    timings are too noisy to gate) an overhead beyond ``budget`` is a
+    ``SystemExit``, not a printout.
     """
     from repro.obs import MetricsRegistry, SpanTracer
 
@@ -466,19 +469,59 @@ def bench_obs_overhead(backends, *, n_slots: int = 8, chunk_steps: int = 8,
             uids = [srv.attach() for _ in range(n_slots)]
             return srv, uids
 
-        def feed_loop(srv, uids):
-            for t0 in range(0, T, chunk_steps):
-                srv.feed({u: rasters[i][t0:t0 + chunk_steps]
-                          for i, u in enumerate(uids)})
-            return srv.total_steps
+        def chunk_at(uids, t0):
+            return {u: rasters[i][t0:t0 + chunk_steps]
+                    for i, u in enumerate(uids)}
 
         bare, bare_uids = make_server(False)
         inst, inst_uids = make_server(True)
-        t_bare = time_call(lambda: feed_loop(bare, bare_uids),
-                           warmup=2, iters=7)
-        t_obs = time_call(lambda: feed_loop(inst, inst_uids),
-                          warmup=2, iters=7)
-        overhead = t_obs / t_bare - 1.0
+        # time bare/instrumented back-to-back PER CHUNK (alternating which
+        # goes first) and take the MEDIAN of the paired differences: two
+        # sequential time_call() blocks let background-load drift
+        # masquerade as telemetry overhead (a 10%+ phantom on busy CI
+        # runners), and even independent per-side minima drift apart by
+        # several percent on a shared machine. Pairing cancels the drift
+        # (both halves of a pair see the same instant), alternation
+        # cancels any first-vs-second bias, and the median discards load
+        # spikes that land inside one half. Scheduling noise is still
+        # several times the true telemetry cost per pair, and it only
+        # INFLATES an estimate — so the gate takes the floor over three
+        # independent trials: a real budget regression lifts all three,
+        # a load spike lifts at most one or two.
+        for t0 in range(0, T, chunk_steps):  # warmup (jit + first feed)
+            bare.feed(chunk_at(bare_uids, t0))
+            inst.feed(chunk_at(inst_uids, t0))
+        estimates = []  # (overhead, median bare, median diff) per trial
+        for trial in range(3):
+            bare_s, diffs = [], []
+            for it in range(7):
+                for t0 in range(0, T, chunk_steps):
+                    cb = chunk_at(bare_uids, t0)
+                    ci = chunk_at(inst_uids, t0)
+                    if (it + t0 // chunk_steps) % 2:
+                        t = time.perf_counter()
+                        inst.feed(ci)
+                        ti = time.perf_counter() - t
+                        t = time.perf_counter()
+                        bare.feed(cb)
+                        tb = time.perf_counter() - t
+                    else:
+                        t = time.perf_counter()
+                        bare.feed(cb)
+                        tb = time.perf_counter() - t
+                        t = time.perf_counter()
+                        inst.feed(ci)
+                        ti = time.perf_counter() - t
+                    bare_s.append(tb)
+                    diffs.append(ti - tb)
+            bare_s.sort()
+            diffs.sort()
+            med_bare = bare_s[len(bare_s) // 2]
+            med_diff = diffs[len(diffs) // 2]
+            estimates.append((med_diff / med_bare, med_bare, med_diff))
+        overhead, med_bare, med_diff = min(estimates)
+        t_bare = med_bare * rounds * 1e6  # per feed-loop, as before
+        t_obs = (med_bare + med_diff) * rounds * 1e6
         emit(f"obs/overhead_{backend}", t_obs / T,
              f"instrumented {t_obs / T:.1f} vs bare {t_bare / T:.1f} "
              f"us/timestep ({100 * overhead:+.2f}% with metrics+tracer on, "
@@ -489,6 +532,12 @@ def bench_obs_overhead(backends, *, n_slots: int = 8, chunk_steps: int = 8,
              instrumented_us_per_step=round(t_obs / T, 3),
              overhead_frac=round(overhead, 4),
              per_timestep=True)
+        if backend == "reference" and overhead > budget:
+            raise SystemExit(
+                f"observability overhead {overhead:.1%} exceeds the "
+                f"{budget:.0%} budget on the reference backend "
+                f"(instrumented {t_obs / T:.1f} vs bare {t_bare / T:.1f} "
+                f"us/timestep)")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -531,7 +580,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "(MetricsRegistry + SpanTracer), recording the "
                          "relative overhead — the observability contract "
                          "is byte-identical outputs and < 5% overhead on "
-                         "the reference backend")
+                         "the reference backend, ENFORCED: exceeding the "
+                         "budget there exits nonzero")
     ap.add_argument("--devices", type=int, default=1,
                     help="also run the engine/streaming benches on a mesh "
                          "over N devices (faked host devices on CPU)")

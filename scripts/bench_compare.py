@@ -1,0 +1,208 @@
+#!/usr/bin/env python
+"""Regression gate over the repo's BENCH_*.json perf trajectory.
+
+``benchmarks/run.py --json`` (and each bench's ``--json FILE``) records
+one document per run; the committed ``BENCH_pr*.json`` series is the
+repo's perf trajectory across PRs. This script joins those documents'
+records on their identity — ``(kind, name)`` plus the schema-v2 axis
+tuple (backend x gate x batch x devices x fuse_steps) — and compares
+each series' **latest** point against its **previous** occurrence:
+
+- ``us_per_call`` may not grow by more than ``--max-time-ratio`` x
+  (wall timings; the default 2.0 tolerates machine-to-machine noise,
+  CI's shared runners use a looser 5.0).
+- efficiency ratios (``traffic_ratio``, ``sop_ratio`` — lower is
+  better, these are arithmetic facts about gating, not timings) may not
+  grow beyond ``max(prev * 1.10, prev + 0.02)``.
+- ``overhead_frac`` (the observability tax measured by
+  ``kernel_bench --obs-overhead``) must stay within
+  ``--overhead-budget`` on EVERY record, not just the latest pair.
+- ``counter_consistent`` (fused-kernel DMA-counter cross-checks) must
+  be true on every record that carries it.
+
+Schema-1 documents (PR 3-5, recorded before the axis contract) are
+normalized on load by filling the missing axes with ``AXIS_DEFAULTS`` —
+the same rule ``benchmarks/common.py`` applies at emit time for
+schema >= 2. ``serve_snn --json-summary`` outputs (recognized by their
+``meta`` + ``mode`` keys) join the trajectory too: each becomes one
+``serve_summary`` record on its meta axes, so serving-throughput
+regressions gate alongside kernel ones.
+
+Exit status: 0 when every check passes, 1 otherwise (CI gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.bench_schema import AXIS_DEFAULTS, SCHEMA_VERSION  # noqa: E402
+
+AXES = tuple(AXIS_DEFAULTS)
+
+# lower-is-better arithmetic ratios: regressions here mean the event
+# gate fetches/computes more than it used to, machine noise is no excuse
+RATIO_METRICS = ("traffic_ratio", "sop_ratio")
+RATIO_REL_SLACK = 0.10   # cur may exceed prev by 10%...
+RATIO_ABS_SLACK = 0.02   # ...or 0.02 absolute, whichever is looser
+
+
+def normalize_record(rec: dict) -> dict:
+    """Fill the schema-v2 axis contract into a (possibly schema-1)
+    record: every axis present, absent ones at their defaults."""
+    out = dict(rec)
+    for axis, default in AXIS_DEFAULTS.items():
+        out.setdefault(axis, default)
+    return out
+
+
+def record_key(rec: dict) -> tuple:
+    """The join identity: what makes two records the same measurement."""
+    return ((rec.get("kind"), rec.get("name"))
+            + tuple(rec.get(a) for a in AXES))
+
+
+def _summary_records(doc: dict) -> list[dict]:
+    """Synthesize bench records from one serve_snn --json-summary doc."""
+    meta = doc["meta"]
+    rec = {
+        "kind": "serve_summary",
+        "name": f"serve/{doc['mode']}",
+        "info": f"serve_snn {doc['mode']} summary "
+                f"@ {meta.get('git_commit') or 'unknown commit'}",
+        **{a: meta["axes"].get(a, d) for a, d in AXIS_DEFAULTS.items()},
+    }
+    if doc.get("steps_per_s"):
+        rec["steps_per_s"] = float(doc["steps_per_s"])
+        rec["us_per_call"] = round(1e6 / float(doc["steps_per_s"]), 3)
+    return [normalize_record(rec)]
+
+
+def load_doc(source) -> tuple[str, list[dict]]:
+    """Load one trajectory point: a BENCH_*.json document or a serve_snn
+    --json-summary object. Returns (label, normalized records)."""
+    if isinstance(source, (str, pathlib.Path)):
+        label = pathlib.Path(source).name
+        with open(source) as fh:
+            doc = json.load(fh)
+    else:
+        label, doc = "<dict>", source
+    if "results" in doc:  # a benchmarks/common.py document
+        schema = doc.get("metadata", {}).get("schema")
+        if schema is not None and schema > SCHEMA_VERSION:
+            raise ValueError(
+                f"{label}: schema {schema} is newer than this gate "
+                f"understands ({SCHEMA_VERSION})")
+        return label, [normalize_record(r) for r in doc["results"]]
+    if "meta" in doc and "mode" in doc:  # a serve_snn summary
+        return label, _summary_records(doc)
+    raise ValueError(
+        f"{label}: neither a bench document (no 'results') nor a "
+        f"serve_snn summary (no 'meta'/'mode')")
+
+
+def compare(trajectory, *, max_time_ratio: float = 2.0,
+            overhead_budget: float = 0.05) -> list[dict]:
+    """Run every check over a chronological list of (label, records).
+
+    Returns one finding dict per check performed:
+    ``{"key", "check", "prev", "cur", "limit", "ok", "detail"}``.
+    """
+    findings: list[dict] = []
+
+    def add(key, check, prev, cur, limit, ok, detail):
+        findings.append({"key": key, "check": check, "prev": prev,
+                         "cur": cur, "limit": limit, "ok": bool(ok),
+                         "detail": detail})
+
+    # per-record invariants: hold at every point of the trajectory
+    for label, records in trajectory:
+        for rec in records:
+            key = f"{label}:{rec['kind']}/{rec['name']}"
+            if rec.get("overhead_frac") is not None:
+                frac = float(rec["overhead_frac"])
+                add(key, "overhead_frac", None, frac, overhead_budget,
+                    frac <= overhead_budget,
+                    f"observability overhead {frac:.1%} vs "
+                    f"{overhead_budget:.0%} budget")
+            if "counter_consistent" in rec:
+                ok = bool(rec["counter_consistent"])
+                add(key, "counter_consistent", None,
+                    rec["counter_consistent"], True, ok,
+                    "DMA counter cross-check")
+
+    # trajectory regressions: latest occurrence vs the previous one
+    series: dict[tuple, list] = {}
+    for label, records in trajectory:
+        for rec in records:
+            series.setdefault(record_key(rec), []).append((label, rec))
+    for rkey, occurrences in sorted(series.items(), key=str):
+        if len(occurrences) < 2:
+            continue
+        (plabel, prev), (clabel, cur) = occurrences[-2], occurrences[-1]
+        key = f"{rkey[0]}/{rkey[1]} [{plabel} -> {clabel}]"
+        if (prev.get("us_per_call") or 0) and cur.get("us_per_call"):
+            ratio = float(cur["us_per_call"]) / float(prev["us_per_call"])
+            add(key, "us_per_call", prev["us_per_call"],
+                cur["us_per_call"], max_time_ratio,
+                ratio <= max_time_ratio,
+                f"{ratio:.2f}x vs {max_time_ratio:.1f}x allowed")
+        for metric in RATIO_METRICS:
+            if prev.get(metric) is None or cur.get(metric) is None:
+                continue
+            p, c = float(prev[metric]), float(cur[metric])
+            limit = max(p * (1 + RATIO_REL_SLACK), p + RATIO_ABS_SLACK)
+            add(key, metric, p, c, round(limit, 4), c <= limit,
+                f"{c:.4f} vs {limit:.4f} allowed (prev {p:.4f})")
+    return findings
+
+
+def render(findings: list[dict], *, verbose: bool = False) -> str:
+    lines = []
+    bad = [f for f in findings if not f["ok"]]
+    for f in findings:
+        if not f["ok"] or verbose:
+            mark = "ok  " if f["ok"] else "FAIL"
+            lines.append(f"{mark} {f['check']:<19} {f['key']}: "
+                         f"{f['detail']}")
+    n_time = sum(f["check"] == "us_per_call" for f in findings)
+    lines.append(
+        f"[bench-compare] {len(findings)} checks over the trajectory "
+        f"({n_time} timing comparisons): "
+        + (f"{len(bad)} FAILED" if bad else "all green"))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="BENCH_*.json perf-regression gate (exit 1 on any "
+                    "threshold regression)")
+    ap.add_argument("docs", nargs="+", metavar="FILE",
+                    help="trajectory points in chronological order: "
+                         "BENCH_*.json documents and/or serve_snn "
+                         "--json-summary files")
+    ap.add_argument("--max-time-ratio", type=float, default=2.0,
+                    help="max allowed us_per_call growth, latest vs "
+                         "previous occurrence (default 2.0; loosen on "
+                         "noisy shared runners)")
+    ap.add_argument("--overhead-budget", type=float, default=0.05,
+                    help="max allowed obs_overhead overhead_frac on "
+                         "every record (default 0.05)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print passing checks too, not just failures")
+    args = ap.parse_args(argv)
+
+    trajectory = [load_doc(p) for p in args.docs]
+    findings = compare(trajectory, max_time_ratio=args.max_time_ratio,
+                       overhead_budget=args.overhead_budget)
+    print(render(findings, verbose=args.verbose))
+    return 1 if any(not f["ok"] for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""The BENCH_*.json schema contract, importable from the package.
+
+``benchmarks/common.py`` stamps every benchmark document with a schema
+version and fills every record's cross-bench axes; ``serve_snn
+--json-summary`` embeds the same version + axes in its ``meta`` block so
+run summaries join the ``BENCH_*.json`` trajectory in
+``scripts/bench_compare.py``. The benchmarks tree is not importable from
+the serving launcher (it runs with ``PYTHONPATH=src`` only), so the
+shared constants live HERE and ``benchmarks/common.py`` re-imports them
+— one definition, two consumers.
+
+SCHEMA_VERSION history:
+
+1. implicit axes: records carried only the fields their bench passed, so
+   consumers had to existence-check every axis (a record with the
+   default gate simply had no ``"gate"`` key).
+2. every record carries ALL of :data:`AXIS_DEFAULTS` unconditionally —
+   absent axes are filled with their defaults at emit time, so grouping
+   by ``(backend, gate, batch, devices, fuse_steps)`` never KeyErrors.
+   Schema-1 documents are normalized on load by applying the same
+   defaults (:func:`scripts.bench_compare.normalize_record`).
+"""
+
+from __future__ import annotations
+
+__all__ = ["AXIS_DEFAULTS", "SCHEMA_VERSION"]
+
+SCHEMA_VERSION = 2
+
+# The cross-bench axes and the value a record has when its bench did not
+# set one ("gate": None = not an engine record / gate not applicable;
+# "devices": 1 = single device; "fuse_steps": 1 = unfused kernels).
+AXIS_DEFAULTS: dict = {
+    "backend": None,
+    "gate": None,
+    "batch": None,
+    "devices": 1,
+    "fuse_steps": 1,
+}

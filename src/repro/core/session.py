@@ -385,7 +385,8 @@ class AcceleratorSession:
                     backpressure=cfg.backpressure,
                     deadline_ms=cfg.deadline_ms,
                     connector=(self.connector if cfg.spill else None),
-                    metrics=self.metrics, tracer=self.tracer)
+                    metrics=self.metrics, tracer=self.tracer,
+                    slo=cfg.slo)
                 self._frontends[key] = fe
             elif (fe.queue_capacity, fe.backpressure,
                   fe.default_deadline_ms,

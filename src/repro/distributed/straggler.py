@@ -70,8 +70,8 @@ class StragglerDetector:
 
 
 def observe_from_registry(detector: StragglerDetector, registry,
-                          *, metric: str = "snn_shard_step_seconds"
-                          ) -> np.ndarray:
+                          *, metric: str = "snn_shard_step_seconds",
+                          tracer=None) -> np.ndarray:
     """One detector step driven by the registry's per-shard gauges.
 
     Reads the most recent ``metric`` gauge value for every shard label
@@ -81,7 +81,15 @@ def observe_from_registry(detector: StragglerDetector, registry,
     back into the ``snn_shard_straggler_flagged`` gauges so the flags are
     exportable alongside the timings. Returns the bool flag mask —
     identical to calling ``observe`` on the same vector directly (pinned
-    by tests/test_straggler_obs.py)."""
+    by tests/test_straggler_obs.py).
+
+    With a ``tracer``, each call also records one ``shard_step`` span
+    carrying the per-shard time vector and the flags it produced — the
+    mesh-lane record ``repro.obs.timeline.mesh_lanes`` folds into a
+    per-device barrier breakdown, and
+    ``repro.obs.timeline.verify_shard_lanes`` replays through a fresh
+    detector to pin that this registry-transported path and the pure
+    ``observe`` agree exactly."""
     fam = registry.gauge(metric)
     times = np.asarray(
         [fam.labels(shard=s).value for s in range(detector.num_hosts)],
@@ -90,6 +98,10 @@ def observe_from_registry(detector: StragglerDetector, registry,
     flag_fam = registry.gauge("snn_shard_straggler_flagged")
     for shard, f in enumerate(flags):
         flag_fam.labels(shard=shard).set(int(f))
+    if tracer is not None:
+        tracer.event("shard_step", None,
+                     times=[float(t) for t in times],
+                     flags=[int(f) for f in flags])
     return flags
 
 

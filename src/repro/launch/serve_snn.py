@@ -22,13 +22,17 @@ reuse can concentrate live streams on one shard); flagged shards get a
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import pathlib
+import subprocess
 import sys
 import time
 
 import jax
 import numpy as np
 
+from repro.bench_schema import SCHEMA_VERSION
 from repro.core import coding
 from repro.core.energy import EnergyModel, counts_from_registry
 from repro.core.engine import BACKENDS, GATES
@@ -40,7 +44,8 @@ from repro.distributed.spike_mesh import (ensure_host_devices,
 from repro.distributed.straggler import (StragglerDetector,
                                          observe_from_registry,
                                          rebalance_shards)
-from repro.obs import MetricsRegistry, SpanTracer, set_registry
+from repro.obs import (FlightRecorder, MetricsRegistry, SLObjective,
+                       SLOWatchdog, SpanTracer, set_registry)
 from repro.obs.tracing import profile_trace
 from repro.serving.frontend import BACKPRESSURE, FrontendConfig
 
@@ -75,7 +80,8 @@ class ShardLoadWatch:
     # 3-chunk imbalance at admission time should not brand the whole run.
     PERSISTENT_FRACTION = 0.1
 
-    def __init__(self, n_shards: int, n_slots: int, registry=None):
+    def __init__(self, n_shards: int, n_slots: int, registry=None,
+                 tracer=None):
         self.n_shards = int(n_shards)
         self.n_slots = int(n_slots)
         padded = -(-n_slots // n_shards) * n_shards
@@ -88,6 +94,12 @@ class ShardLoadWatch:
         #: (straggler.observe_from_registry), so the exported timings are
         #: exactly what the flags were computed from.
         self.registry = registry
+        #: optional SpanTracer: each dispatch records one ``shard_step``
+        #: span (per-shard attributed times + the flags they produced) —
+        #: the mesh-lane record repro.obs.timeline folds into a
+        #: per-device barrier breakdown and replay-verifies against a
+        #: fresh detector.
+        self.tracer = tracer
         self.flag_counts = np.zeros(n_shards, np.int64)
         self.chunk_times: list[float] = []
 
@@ -103,9 +115,14 @@ class ShardLoadWatch:
             fam = self.registry.gauge("snn_shard_step_seconds")
             for shard, t in enumerate(attributed):
                 fam.labels(shard=shard).set(float(t))
-            flags = observe_from_registry(self.detector, self.registry)
+            flags = observe_from_registry(self.detector, self.registry,
+                                          tracer=self.tracer)
         else:
             flags = self.detector.observe(attributed)
+            if self.tracer is not None:
+                self.tracer.event("shard_step", None,
+                                  times=[float(t) for t in attributed],
+                                  flags=[int(f) for f in flags])
         self.flag_counts += flags
 
     def persistent_flags(self) -> np.ndarray:
@@ -169,6 +186,27 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--queue-capacity", type=int, default=32,
                     help="bounded frontend request queue (--async only); "
                          "backpressure engages beyond it")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="SLO objective (--async only): p99 total "
+                         "(submit-to-retire) latency must stay under this "
+                         "many ms on the rolling window; breaches count "
+                         "in the summary and trip the flight recorder")
+    ap.add_argument("--slo-miss-ratio", type=float, default=None,
+                    help="SLO objective (--async only): deadline "
+                         "misses / (misses + dones) must stay under this "
+                         "ratio on the rolling window")
+    ap.add_argument("--slo-queue-depth", type=int, default=None,
+                    help="SLO objective (--async only): the admission "
+                         "queue must stay at or under this depth on the "
+                         "rolling window")
+    ap.add_argument("--slo-window-s", type=float, default=60.0,
+                    help="rolling window (seconds) the --slo-* objectives "
+                         "are evaluated over (burn rate = observed value "
+                         "over threshold on this window)")
+    ap.add_argument("--flight", default=None, metavar="FILE",
+                    help="arm a bounded flight recorder (last-N lifecycle "
+                         "spans + metric deltas): dumps a post-mortem "
+                         "JSON to FILE on any crash or --slo-* breach")
     ap.add_argument("--backend", choices=list(BACKENDS), default="reference")
     ap.add_argument("--gate", choices=list(GATES), default=None,
                     help="event-gate granularity of the serving engine "
@@ -210,10 +248,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="capture a jax.profiler trace of the serving loop "
                          "into DIR, with lifecycle spans mirrored as trace "
                          "annotations")
-    ap.add_argument("--json-summary", action="store_true",
-                    help="also print the structured run summary as one JSON "
+    ap.add_argument("--json-summary", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="also emit the structured run summary as one JSON "
                          "object (machine-readable run report; same data "
-                         "the human-readable lines are formatted from)")
+                         "the human-readable lines are formatted from) — "
+                         "to stdout, or to FILE when given, ready to feed "
+                         "into scripts/bench_compare.py")
     ap.add_argument("--n-inputs", type=int, default=24)
     ap.add_argument("--n-neurons", type=int, default=48)
     ap.add_argument("--intensity", type=float, default=0.25,
@@ -305,6 +346,12 @@ def _render_summary(s: dict) -> list[str]:
         lines.append(f"[serve-snn] queue-wait: {_fmt_lat(fe['queue_wait'])}")
         lines.append(f"[serve-snn] service:    {_fmt_lat(fe['service'])}")
         lines.append(f"[serve-snn] total:      {_fmt_lat(fe['total'])}")
+        if s.get("slo"):
+            parts = [f"{o['name']} burn {o['burn_rate']:.2f}"
+                     + (" BREACHING" if o["breached"] else "")
+                     for o in s["slo"]["objectives"]]
+            lines.append(f"[serve-snn] SLO: {'; '.join(parts)} "
+                         f"(breach onsets {s['slo']['breaches']})")
     else:
         lines.append(
             f"[serve-snn] {s['streams_done']} streams, {s['steps']} "
@@ -377,14 +424,49 @@ def _render_straggler(rep: dict | None, n_slots: int) -> list[str]:
     return lines
 
 
+def _git_commit() -> str | None:
+    """The repo's HEAD commit (None outside a git checkout)."""
+    try:
+        r = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, cwd=pathlib.Path(__file__).resolve().parent)
+        return r.stdout.strip() if r.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def _summary_meta(args) -> dict:
+    """Provenance block joining a run summary to the BENCH_*.json
+    trajectory: the git commit it ran at, the bench schema version its
+    axes follow, and the run's values on the cross-bench axes (the join
+    key scripts/bench_compare.py groups on)."""
+    return {
+        "git_commit": _git_commit(),
+        "bench_schema": SCHEMA_VERSION,
+        "axes": {
+            "backend": args.backend,
+            "gate": args.gate,
+            "batch": args.n_slots,
+            "devices": args.devices,
+            "fuse_steps": args.fuse_steps,
+        },
+    }
+
+
 def emit_summary(args, summary: dict, metrics: MetricsRegistry,
                  tracer: SpanTracer) -> None:
     """The single summary emitter: render the structured summary, then
     honor --json-summary / --metrics / --trace."""
+    summary.setdefault("meta", _summary_meta(args))
     for line in _render_summary(summary):
         print(line)
-    if args.json_summary:
-        print(json.dumps(summary, indent=2, sort_keys=True, default=float))
+    if args.json_summary is not None:
+        text = json.dumps(summary, indent=2, sort_keys=True, default=float)
+        if args.json_summary == "-":
+            print(text)
+        else:
+            with open(args.json_summary, "w") as f:
+                f.write(text + "\n")
     if args.metrics is not None:
         text = metrics.to_prometheus()
         if args.metrics == "-":
@@ -397,7 +479,8 @@ def emit_summary(args, summary: dict, metrics: MetricsRegistry,
         print(f"[serve-snn] wrote {n} lifecycle spans to {args.trace}")
 
 
-def run_async(args, server, views, requests, rng, metrics) -> dict:
+def run_async(args, server, views, requests, rng, metrics,
+              recorder=None) -> dict:
     """Open-loop async serving: arrivals on the wall clock, not the loop.
 
     Requests are submitted at precomputed Poisson arrival TIMES (rate =
@@ -448,6 +531,8 @@ def run_async(args, server, views, requests, rng, metrics) -> dict:
                     0.0, arrive_at[i] - (time.perf_counter() - t0))))
             continue
         fe.pump()
+        if recorder is not None:
+            recorder.note_metrics(metrics)
     wall = time.perf_counter() - t0
 
     steps = server.total_steps
@@ -462,6 +547,7 @@ def run_async(args, server, views, requests, rng, metrics) -> dict:
         "steps": int(steps),
         "steps_per_s": steps / wall,
         "frontend": fe.metrics(),
+        "slo": None if fe.slo is None else fe.slo.report(),
         "server": _server_report(metrics),
         "energy": _energy_report(metrics),
     }
@@ -483,6 +569,11 @@ def main(argv=None) -> None:
     if args.drain is not None and args.drain < 1:
         raise SystemExit("--drain must be >= 1 (chunk-rounds before the "
                          "hot redeploy)")
+    slo_flags = (args.slo_p99_ms, args.slo_miss_ratio, args.slo_queue_depth)
+    if any(v is not None for v in slo_flags) and not args.async_mode:
+        raise SystemExit("--slo-* objectives are --async only (the "
+                         "frontend pump feeds the watchdog; the sync loop "
+                         "has no request deadlines or admission queue)")
 
     mesh = None
     if args.devices > 1:
@@ -503,8 +594,28 @@ def main(argv=None) -> None:
     # through the server, frontend, and connector it builds. Also
     # installed as the process-wide default so tools can export it.
     metrics = MetricsRegistry()
-    tracer = SpanTracer(annotate=args.profile is not None)
+    # --flight: the recorder rides the tracer's sink protocol, so the
+    # ring always holds the freshest spans with no second recording path
+    recorder = None if args.flight is None else FlightRecorder(
+        path=args.flight)
+    tracer = SpanTracer(annotate=args.profile is not None, sink=recorder)
     set_registry(metrics)
+    objectives = []
+    if args.slo_p99_ms is not None:
+        objectives.append(SLObjective("latency_p99", "latency_p99",
+                                      args.slo_p99_ms / 1e3,
+                                      window_s=args.slo_window_s))
+    if args.slo_miss_ratio is not None:
+        objectives.append(SLObjective("miss_ratio", "miss_ratio",
+                                      args.slo_miss_ratio,
+                                      window_s=args.slo_window_s))
+    if args.slo_queue_depth is not None:
+        objectives.append(SLObjective("queue_depth", "queue_depth",
+                                      float(args.slo_queue_depth),
+                                      window_s=args.slo_window_s))
+    slo = None if not objectives else SLOWatchdog(
+        objectives, registry=metrics,
+        on_breach=(recorder.on_breach,) if recorder is not None else ())
     sess = AcceleratorSession(backend=args.backend, mesh=mesh,
                               fuse_steps=args.fuse_steps,
                               connector=connector,
@@ -521,7 +632,8 @@ def main(argv=None) -> None:
             deadline_ms=args.deadline_ms,
             # with a deadline, spill mid-stream expiries to the session
             # connector and resume each once instead of restarting
-            spill=args.deadline_ms is not None)
+            spill=args.deadline_ms is not None,
+            slo=slo)
     views = {name: sess.serve(name, n_slots=args.n_slots,
                               chunk_steps=args.chunk, gate=args.gate,
                               frontend=frontend_cfg)
@@ -538,7 +650,8 @@ def main(argv=None) -> None:
           f"{server.engine.n_phys} neurons), backend={args.backend}, "
           f"{args.n_slots} slots x {args.chunk}-step chunks{mesh_note}")
 
-    watch = ShardLoadWatch(n_shards, args.n_slots, registry=metrics)
+    watch = ShardLoadWatch(n_shards, args.n_slots, registry=metrics,
+                           tracer=tracer)
 
     # synthetic request plan: stream i -> (model, Poisson-encoded stimulus)
     key = jax.random.key(args.seed)
@@ -552,9 +665,13 @@ def main(argv=None) -> None:
             k, intensity, args.steps_per_stream, dtype=np.int32))[:, 0]
         requests.append((uid, name, spikes))
 
+    crash_net = (recorder.armed() if recorder is not None
+                 else contextlib.nullcontext())
+
     if args.async_mode:
-        with profile_trace(args.profile):
-            summary = run_async(args, server, views, requests, rng, metrics)
+        with crash_net, profile_trace(args.profile):
+            summary = run_async(args, server, views, requests, rng, metrics,
+                                recorder=recorder)
         emit_summary(args, summary, metrics, tracer)
         return
 
@@ -576,72 +693,75 @@ def main(argv=None) -> None:
     profile_ctx.__enter__()
     t0 = time.perf_counter()
     round_i = 0
-    while arrivals or live or server.scheduler.waiting:
-        now = time.perf_counter()
-        if (args.drain is not None and round_i >= args.drain
-                and "hotswap" not in sess.models):
-            # rolling-redeploy drill: a NEW model lands mid-run; live
-            # streams are drained to the connector by deploy() and
-            # restored into the new fused server by the re-serve —
-            # their rasters continue byte-identically
-            n_live = len(server.scheduler.active)
-            steps_base += server.total_steps  # the old server's work
-            sess.deploy("hotswap",
-                        make_net(rng, args.n_inputs, args.n_neurons))
-            views = {name: sess.serve(name, n_slots=args.n_slots,
-                                      chunk_steps=args.chunk,
-                                      gate=args.gate)
-                     for name in names}
-            server = next(iter(views.values())).server
-            print(f"[serve-snn] --drain: hot-deployed 1 extra model after "
-                  f"round {round_i}; {n_live} live stream(s) migrated "
-                  f"mid-flight through the "
-                  f"{'file' if args.connector else 'in-memory'} connector")
-        if arrivals:
-            for uid, name, spikes in arrivals.pop(0):
-                views[name].attach(uid)
-                live[uid] = [name, spikes, 0]
-                t_arrive[uid] = now
-        # ONE batched dispatch per round: every admitted stream's chunk —
-        # across models — embeds into the fused layout and steps together
-        done = []
-        fused_inputs = {}
-        live_slots = []
-        for uid, (name, spikes, cur) in live.items():
-            slot = server.slot_of(uid)
-            if slot is None:
-                continue  # still waiting for a slot
-            live_slots.append(slot)
-            n = min(args.chunk, len(spikes) - cur)
-            fused_inputs[uid] = views[name].embed(spikes[cur:cur + n])
-            live[uid][2] = cur + n
-            if cur + n >= len(spikes):
-                done.append(uid)
-        if fused_inputs:
-            t_chunk0 = time.perf_counter()
-            res = server.feed(fused_inputs)
-            watch.observe(time.perf_counter() - t_chunk0, live_slots)
-            for uid, r in res.items():
-                out_chunks[uid].append(r["spikes"])
-        if n_shards > 1 and not rebalanced:
-            flags = watch.persistent_flags()
-            if flags.any() and not flags.all():
-                from repro.serving.connector import rebalance_streams
-                moves = rebalance_streams(
-                    server, flags, slots_per_shard=watch.slots_per_shard)
-                if moves:
-                    rebalanced = True
-                    print(f"[serve-snn] straggler rebalance: migrated "
-                          f"{len(moves)} live stream(s) off flagged "
-                          f"shard(s) {np.where(flags)[0].tolist()} onto "
-                          f"donor-shard slots "
-                          f"{[(u, f, t) for u, f, t in moves]} "
-                          f"(uid, from, to) — carries moved bit-for-bit")
-        for uid in done:
-            name = live.pop(uid)[0]
-            views[name].detach(uid)
-            t_done[uid] = time.perf_counter()
-        round_i += 1
+    with crash_net:
+        while arrivals or live or server.scheduler.waiting:
+            now = time.perf_counter()
+            if (args.drain is not None and round_i >= args.drain
+                    and "hotswap" not in sess.models):
+                # rolling-redeploy drill: a NEW model lands mid-run; live
+                # streams are drained to the connector by deploy() and
+                # restored into the new fused server by the re-serve —
+                # their rasters continue byte-identically
+                n_live = len(server.scheduler.active)
+                steps_base += server.total_steps  # the old server's work
+                sess.deploy("hotswap",
+                            make_net(rng, args.n_inputs, args.n_neurons))
+                views = {name: sess.serve(name, n_slots=args.n_slots,
+                                          chunk_steps=args.chunk,
+                                          gate=args.gate)
+                         for name in names}
+                server = next(iter(views.values())).server
+                print(f"[serve-snn] --drain: hot-deployed 1 extra model after "
+                      f"round {round_i}; {n_live} live stream(s) migrated "
+                      f"mid-flight through the "
+                      f"{'file' if args.connector else 'in-memory'} connector")
+            if arrivals:
+                for uid, name, spikes in arrivals.pop(0):
+                    views[name].attach(uid)
+                    live[uid] = [name, spikes, 0]
+                    t_arrive[uid] = now
+            # ONE batched dispatch per round: every admitted stream's chunk —
+            # across models — embeds into the fused layout and steps together
+            done = []
+            fused_inputs = {}
+            live_slots = []
+            for uid, (name, spikes, cur) in live.items():
+                slot = server.slot_of(uid)
+                if slot is None:
+                    continue  # still waiting for a slot
+                live_slots.append(slot)
+                n = min(args.chunk, len(spikes) - cur)
+                fused_inputs[uid] = views[name].embed(spikes[cur:cur + n])
+                live[uid][2] = cur + n
+                if cur + n >= len(spikes):
+                    done.append(uid)
+            if fused_inputs:
+                t_chunk0 = time.perf_counter()
+                res = server.feed(fused_inputs)
+                watch.observe(time.perf_counter() - t_chunk0, live_slots)
+                for uid, r in res.items():
+                    out_chunks[uid].append(r["spikes"])
+            if n_shards > 1 and not rebalanced:
+                flags = watch.persistent_flags()
+                if flags.any() and not flags.all():
+                    from repro.serving.connector import rebalance_streams
+                    moves = rebalance_streams(
+                        server, flags, slots_per_shard=watch.slots_per_shard)
+                    if moves:
+                        rebalanced = True
+                        print(f"[serve-snn] straggler rebalance: migrated "
+                              f"{len(moves)} live stream(s) off flagged "
+                              f"shard(s) {np.where(flags)[0].tolist()} onto "
+                              f"donor-shard slots "
+                              f"{[(u, f, t) for u, f, t in moves]} "
+                              f"(uid, from, to) — carries moved bit-for-bit")
+            for uid in done:
+                name = live.pop(uid)[0]
+                views[name].detach(uid, reason="done")
+                t_done[uid] = time.perf_counter()
+            round_i += 1
+            if recorder is not None:
+                recorder.note_metrics(metrics)
     wall = time.perf_counter() - t0
     profile_ctx.__exit__(None, None, None)
 

@@ -158,6 +158,15 @@ METRIC_SPECS: dict[str, MetricSpec] = _specs(
     MetricSpec("snn_session_redeploys_total", "counter",
                "Deploys that drained live streams through the "
                "connector (rolling redeploys)."),
+    # -- SLO watchdog --------------------------------------------------
+    MetricSpec("snn_slo_burn_rate", "gauge",
+               "Most recent burn rate per SLO objective: observed value "
+               "over threshold on the rolling window (> 1 = breaching).",
+               labels=("objective",)),
+    MetricSpec("snn_slo_breaches_total", "counter",
+               "Breach onsets per SLO objective (counted on the "
+               "transition into breach, not per evaluation).",
+               labels=("objective",)),
 )
 
 
@@ -420,7 +429,8 @@ class MetricsRegistry:
         with self._lock:
             for name in sorted(self._families):
                 fam = self._families[name]
-                lines.append(f"# HELP {name} {fam.spec.help}")
+                lines.append(
+                    f"# HELP {name} {_escape_help(fam.spec.help)}")
                 lines.append(f"# TYPE {name} {fam.spec.kind}")
                 for key in sorted(fam.children):
                     child = fam.children[key]
@@ -473,8 +483,17 @@ def _fmt_le(ub: float) -> str:
 
 
 def _escape(v: str) -> str:
+    """Label-VALUE escaping per the text exposition format: backslash,
+    newline, and double-quote (in that order — escaping backslash first
+    keeps the others' escapes intact)."""
     return (v.replace("\\", r"\\").replace("\n", r"\n")
             .replace('"', r'\"'))
+
+
+def _escape_help(v: str) -> str:
+    """HELP-line escaping: the exposition format escapes backslash and
+    newline there (quotes stay literal — HELP text is not quoted)."""
+    return v.replace("\\", r"\\").replace("\n", r"\n")
 
 
 def _labelstr(labels: tuple[tuple[str, str], ...]) -> str:

@@ -52,6 +52,7 @@ SPAN_KINDS: tuple[str, ...] = (
     "deploy",      # session (re)deploy of compiled programs
     "snapshot",    # connector snapshot write (attrs: nbytes)
     "restore",     # connector snapshot read (attrs: nbytes)
+    "shard_step",  # one sharded dispatch (attrs: per-shard times, flags)
 )
 
 

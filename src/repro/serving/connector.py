@@ -456,7 +456,7 @@ def migrate_stream(server, uid, *, slot: int) -> int:
              else tracer.clock if tracer is not None else None)
     t0 = clock() if clock else 0.0
     snap = server.snapshot_stream(uid)
-    server.detach(uid)
+    server.detach(uid, reason="parked")
     server.attach_stream(snap, uid=uid, slot=slot)
     if metrics is not None:
         nbytes = sum(a.nbytes for a in snap.arrays.values())

@@ -114,6 +114,11 @@ class FrontendConfig:
     #: connector (state ``"parked"``) instead of zeroing them, so
     #: ``resume()`` continues the stream bit-clean (spill-on-evict).
     spill: bool = False
+    #: optional ``repro.obs.slo.SLOWatchdog`` the pump feeds (latencies
+    #: on retire, misses on expiry, queue depth per round) and checks
+    #: once per round. Excluded from the shared-frontend conflict check:
+    #: a watchdog observes, it does not shape admission.
+    slo: object | None = None
 
 
 @dataclasses.dataclass
@@ -224,7 +229,7 @@ class AsyncSpikeFrontend:
                  backpressure: str = "reject",
                  deadline_ms: float | None = None,
                  clock=time.perf_counter, connector=None,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, slo=None):
         if queue_capacity <= 0:
             raise ValueError(
                 f"queue_capacity must be positive, got {queue_capacity}")
@@ -252,6 +257,12 @@ class AsyncSpikeFrontend:
         #: one value `metrics()` reports. Pure host-side accounting.
         self.registry = metrics
         self.tracer = tracer
+        #: optional SLO watchdog (repro.obs.slo.SLOWatchdog): the pump
+        #: feeds it total latencies, deadline outcomes, and queue depth,
+        #: and runs one burn-rate evaluation per round. Observational
+        #: only — a breach fires the watchdog's callbacks (e.g. a
+        #: flight-recorder dump), never touches admission.
+        self.slo = slo
         self._spill_ns = f"spill-{next(_FRONTEND_IDS)}"
         self._lock = threading.RLock()
         self._rid = itertools.count()
@@ -312,10 +323,18 @@ class AsyncSpikeFrontend:
             self.registry.histogram(name).labels(
                 stream_class=self._class_of(req)).observe(seconds)
 
-    def _obs_retired(self, req: _Request, outcome: str) -> None:
+    def _obs_event(self, kind: str, req: _Request, **attrs) -> None:
+        """Record a request-lifecycle event. Request ids and server
+        stream uids are independent namespaces sharing one tracer, so
+        every request span carries ``domain="request"`` — timeline
+        reconstruction keys on (domain, uid) and never aliases rid 0
+        with stream uid 0."""
         if self.tracer is not None:
-            self.tracer.event("retired", req.rid, outcome=outcome,
-                              steps_done=req.cursor)
+            self.tracer.event(kind, req.rid, domain="request", **attrs)
+
+    def _obs_retired(self, req: _Request, outcome: str) -> None:
+        self._obs_event("retired", req, outcome=outcome,
+                        steps_done=req.cursor)
 
     # -- submission --------------------------------------------------------
     def submit(self, chunk, *, view=None, deadline_ms: float | None = None,
@@ -370,10 +389,8 @@ class AsyncSpikeFrontend:
                 events_policy=events_policy,
             )
             self._count("submitted")
-            if self.tracer is not None:
-                self.tracer.event("queued", req.rid,
-                                  steps=req.steps_total,
-                                  stream_class=self._class_of(req))
+            self._obs_event("queued", req, steps=req.steps_total,
+                            stream_class=self._class_of(req))
             if not self._make_room():
                 req.state = "rejected"
                 self._count("rejected")
@@ -424,7 +441,7 @@ class AsyncSpikeFrontend:
                 self._obs_retired(req, "cancelled")
                 return True
             if req.state == "running":
-                self.server.detach(req.uid)
+                self.server.detach(req.uid, reason="cancelled")
                 del self._running[req.uid]
                 req.state = "cancelled"
                 req.finished_at = self.clock()
@@ -453,6 +470,9 @@ class AsyncSpikeFrontend:
                             else now + deadline_ms / 1e3)
             req.state = "queued"
             self._queue.append(req)
+            self._obs_event("queued", req, steps=req.steps_total,
+                            stream_class=self._class_of(req),
+                            resumed=True)
             self._obs_depth()
             return True
 
@@ -501,13 +521,14 @@ class AsyncSpikeFrontend:
                 self._queue.remove(req)
                 if req.parked_key is not None:
                     req.state = "parked"
-                    if self.tracer is not None:
-                        self.tracer.event("parked", req.rid)
+                    self._obs_event("parked", req)
                 else:
                     req.state = "expired"
                     self._count("expired_queued")
                     self._obs_retired(req, "expired")
                 self._count("expired")
+                if self.slo is not None:
+                    self.slo.record_miss()
                 summary["expired"] += 1
             # ... mid-stream streams are evicted like any other eviction:
             # detach zeroes the slot carry, so the next occupant powers
@@ -522,38 +543,40 @@ class AsyncSpikeFrontend:
                 if self.connector is not None:
                     req.parked_key = (self._spill_ns, req.rid)
                     snap = self.server.snapshot_stream(uid)
-                    self.server.detach(uid)
+                    self.server.detach(uid, reason="parked")
                     self.connector.insert(req.parked_key, snap)
                     req.uid = None
                     req.state = "parked"
                     self._count("parked")
-                    if self.tracer is not None:
-                        self.tracer.event("parked", req.rid,
-                                          steps_done=req.cursor)
+                    self._obs_event("parked", req, steps_done=req.cursor)
                 else:
-                    self.server.detach(uid)
+                    self.server.detach(uid, reason="expired")
                     req.state = "expired"
                     req.finished_at = now
                     self._count("expired")
                     self._count("expired_running")
                     self._obs_retired(req, "expired")
+                if self.slo is not None:
+                    self.slo.record_miss()
                 summary["expired"] += 1
             # 2. continuous-batching admission: queue head -> free slots
             # (a resumed request re-attaches FROM its parked carry — the
             # only admission that does not power up from zero)
             while self._queue and self.server.scheduler.free_slots > 0:
                 req = self._queue.popleft()
-                if req.parked_key is not None:
+                resumed = req.parked_key is not None
+                if resumed:
                     snap = self.connector.select(req.parked_key)
                     req.uid = self.server.attach_stream(snap)
                     self.connector.evict(req.parked_key)
                     req.parked_key = None
                     self._count("resumed")
-                    if self.tracer is not None:
-                        self.tracer.event("resumed", req.rid,
-                                          uid=req.uid)
+                    self._obs_event("resumed", req, server_uid=req.uid)
                 else:
                     req.uid = self.server.attach()
+                self._obs_event("admitted", req,
+                                slot=self.server.slot_of(req.uid),
+                                server_uid=req.uid, resumed=resumed)
                 req.admitted_at = now
                 req.state = "running"
                 self._running[req.uid] = req
@@ -580,7 +603,7 @@ class AsyncSpikeFrontend:
             for uid in [u for u, r in self._running.items()
                         if r.cursor >= r.steps_total]:
                 req = self._running.pop(uid)
-                self.server.detach(uid)
+                self.server.detach(uid, reason="done")
                 req.state = "done"
                 req.finished_at = now
                 self._count("done")
@@ -591,12 +614,17 @@ class AsyncSpikeFrontend:
                 self._obs_latency("snn_frontend_total_seconds",
                                   req, now - req.submitted_at)
                 self._obs_retired(req, "done")
+                if self.slo is not None:
+                    self.slo.record_done(now - req.submitted_at)
                 summary["retired"] += 1
             self.rounds += 1
             self.depth_samples.append(len(self._queue))
             if self.registry is not None:
                 self.registry.counter("snn_frontend_rounds_total").inc()
                 self._obs_depth()
+            if self.slo is not None:
+                self.slo.record_queue_depth(len(self._queue))
+                self.slo.check(now)
             summary["queue_depth"] = len(self._queue)
             return summary
 

@@ -268,9 +268,11 @@ class SpikeServer:
 
     def _obs_count_chunk(self, ext_u: np.ndarray, out_u: np.ndarray,
                          prev_row: np.ndarray) -> np.ndarray:
-        """Measured-event accounting for one stream's slice of a chunk
-        dispatch: count source events, SOPs (events x real fanout), row
-        fetches, and per-example-gate weight-block traffic, exactly as
+        """Measured-event accounting for ONE stream's (n, ...) raster
+        slice (the closed-loop single-step path; batch dispatches use the
+        vectorized pass in :meth:`_obs_feed_chunk`): count source events,
+        SOPs (events x real fanout), row fetches, and per-example-gate
+        weight-block traffic, exactly as
         :func:`repro.events.trace.trace_run` would measure the same
         rasters. Returns the stream's new recurrent row. Host-side only."""
         m = self.metrics
@@ -296,20 +298,37 @@ class SpikeServer:
         return out_u[-1]
 
     def _obs_feed_chunk(self, t_start: float, active: np.ndarray,
-                        spikes: np.ndarray, chunks: dict, t0: int) -> None:
+                        spikes: np.ndarray, ext: np.ndarray,
+                        chunks: dict, t0: int) -> None:
         """Record one chunk dispatch: latency + step/spike counters, a
-        chunk_step span, and per-stream measured-event accounting."""
+        chunk_step span, and measured-event accounting.
+
+        The accounting — source events, SOPs (events x real fanout), row
+        fetches, per-example-gate weight-block traffic, exactly as
+        :func:`repro.events.trace.trace_run` would measure the same
+        rasters — runs ONE vectorized pass over the whole ``(T, n_slots,
+        ...)`` dispatch rather than per stream: the per-stream loop's
+        numpy-call overhead was the single biggest telemetry cost
+        (benchmarks/kernel_bench.py --obs-overhead gates the budget).
+        Inactive (slot, step) rows are masked out, so the counters match
+        the per-stream slicing bit-for-bit on ragged chunks."""
         from repro.obs.tracing import Span
 
         dt = self._obs_clock()() - t_start
         n_active = int(active.sum())
         if self.tracer is not None:
             now = self.tracer.clock()
+            # participating stream uids (slot order), so timeline
+            # reconstruction can attribute the chunk to its streams —
+            # and audit that each one was admitted at dispatch time
+            uids = [uid for uid, (slot, arr) in
+                    sorted(chunks.items(), key=lambda kv: kv[1][0])
+                    if arr.shape[0] - t0 > 0]
             # duration span timed by the caller (clock read bracketed the
             # dispatch; recording it here keeps the hot loop branch-free)
             self.tracer._record(Span(
                 "chunk_step", None, now - dt, now,
-                {"steps": n_active, "streams": len(chunks)}))
+                {"steps": n_active, "streams": len(chunks), "uids": uids}))
         if self.metrics is None:
             return
         m = self.metrics
@@ -317,12 +336,45 @@ class SpikeServer:
         m.counter("snn_server_chunks_total").inc()
         m.counter("snn_server_steps_total").inc(n_active)
         m.counter("snn_server_spikes_total").inc(int(spikes.sum()))
-        for uid, (slot, arr) in chunks.items():
-            n = min(self.chunk_steps, arr.shape[0] - t0)
-            if n > 0:
-                self._prev_host[slot] = self._obs_count_chunk(
-                    arr[t0:t0 + n], spikes[:n, slot],
-                    self._prev_host[slot])
+        mask = active.astype(bool)                      # (T, n_slots)
+        if n_active == 0:
+            return
+        # recurrent source rows: each stream's previous output (its
+        # carried row for step 0), masked to the steps it actually ran;
+        # the full-chunk case (every slot active every step — the steady
+        # state) skips the masking copies entirely
+        full = bool(mask.all())
+        sp = spikes if full else np.where(mask[:, :, None], spikes, 0)
+        prev = np.concatenate([self._prev_host[None], sp[:-1]], axis=0)
+        ext_b = ext != 0                                # pre-masked zeros
+        prev_b = prev != 0
+        if not full:
+            prev_b &= mask[:, :, None]
+        m.counter("snn_server_source_events_total").labels(
+            kind="external").inc(int(ext_b.sum()))
+        m.counter("snn_server_source_events_total").labels(
+            kind="recurrent").inc(int(prev_b.sum()))
+        per_src = np.concatenate(
+            [ext_b.sum(axis=(0, 1)), prev_b.sum(axis=(0, 1))]
+        ).astype(np.int64)                              # (S,) event counts
+        m.counter("snn_server_sops_total").inc(int(per_src @ self._fanout))
+        m.counter("snn_server_row_fetches_total").inc(
+            int(per_src @ self._rowseg))
+        src = np.concatenate([ext_b, prev_b], axis=2)   # (T, n_slots, S)
+        T, n_slots, S = src.shape
+        pad = self._n_src_blocks * _OBS_BLOCK_SRC - S
+        if pad:
+            src = np.pad(src, ((0, 0), (0, 0), (0, pad)))
+        touched = int(src.reshape(T, n_slots, self._n_src_blocks,
+                                  _OBS_BLOCK_SRC).any(axis=3).sum())
+        m.counter("snn_server_weight_blocks_fetched_total").inc(touched)
+        m.counter("snn_server_weight_blocks_dense_total").inc(
+            n_active * self._n_src_blocks)
+        # roll each served stream's recurrent row forward to its LAST
+        # active step's output (ragged streams end mid-chunk)
+        n_per = mask.sum(axis=0)
+        served = n_per > 0
+        self._prev_host[served] = sp[n_per[served] - 1, served]
 
     # -- lifecycle --------------------------------------------------------
     def attach(self, uid=None):
@@ -346,11 +398,19 @@ class SpikeServer:
                 self.tracer.event("admitted", uid, slot=slot)
         return uid
 
-    def detach(self, uid) -> StreamStats:
+    def detach(self, uid, *, reason: str = "detached") -> StreamStats:
         """Evict a stream. Frees + ZEROES its slot (the next occupant must
         power up from clean state); the longest-waiting stream, if any, is
-        admitted into the freed slot."""
+        admitted into the freed slot.
+
+        ``reason`` is observational only (the datapath is identical for
+        every reason): it becomes the stream's terminal ``retired`` span
+        outcome — or, with ``reason="parked"``, a ``parked`` span
+        instead, for callers that park the carry in a connector (spill,
+        migration, rolling drain) so the timeline continues through the
+        later restore instead of ending here."""
         st = self.streams.pop(uid)
+        self._obs_detached(uid, st, reason)
         if self.scheduler.slot_of(uid) is None:
             self.scheduler.cancel(uid)
             self._obs_occupancy()
@@ -368,6 +428,15 @@ class SpikeServer:
                 self.tracer.event("admitted", admitted, slot=slot)
         self._obs_occupancy()
         return st
+
+    def _obs_detached(self, uid, st: "StreamStats", reason: str) -> None:
+        if self.tracer is None:
+            return
+        if reason == "parked":
+            self.tracer.event("parked", uid, steps_done=int(st.steps))
+        else:
+            self.tracer.event("retired", uid, outcome=reason,
+                              steps_done=int(st.steps))
 
     def slot_of(self, uid) -> int | None:
         return self.scheduler.slot_of(uid)
@@ -410,7 +479,7 @@ class SpikeServer:
         :meth:`attach_stream` restores it anywhere compatible."""
         snap = self.snapshot_stream(uid)
         connector.insert(uid, snap)
-        self.detach(uid)
+        self.detach(uid, reason="parked")
         return snap
 
     def attach_stream(self, source, uid=None, *, slot: int | None = None):
@@ -564,7 +633,8 @@ class SpikeServer:
             spikes = np.asarray(spikes)
             self.total_steps += int(active.sum())
             if obs:
-                self._obs_feed_chunk(t_chunk, active, spikes, chunks, t0)
+                self._obs_feed_chunk(t_chunk, active, spikes, ext,
+                                     chunks, t0)
             for uid, (slot, arr) in chunks.items():
                 n = min(self.chunk_steps, arr.shape[0] - t0)
                 if n > 0:
@@ -711,8 +781,8 @@ class ModelStream:
         self._check_fresh()
         return self.server.attach(uid)
 
-    def detach(self, uid) -> StreamStats:
-        return self.server.detach(uid)
+    def detach(self, uid, *, reason: str = "detached") -> StreamStats:
+        return self.server.detach(uid, reason=reason)
 
     def slot_of(self, uid):
         return self.server.slot_of(uid)

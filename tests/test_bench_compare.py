@@ -1,0 +1,155 @@
+"""The bench-regression gate: trajectory joins, thresholds, exit codes.
+
+``scripts/bench_compare.py`` is CI's perf gate, so its own behavior is
+pinned: the committed ``BENCH_pr*.json`` trajectory must pass green
+(the gate gating the repo must accept the repo), a deliberately
+regressed point must fail with exit 1, schema-1 records normalize onto
+the schema-2 axis contract, and ``serve_snn --json-summary`` documents
+join the trajectory as ``serve_summary`` records.
+"""
+
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+import bench_compare  # noqa: E402
+
+BENCH_FILES = sorted(REPO.glob("BENCH_pr*.json"),
+                     key=lambda p: int(p.stem.split("pr")[1]))
+
+
+def _load_all():
+    return [bench_compare.load_doc(p) for p in BENCH_FILES]
+
+
+def test_committed_trajectory_exists_and_spans_schemas():
+    assert len(BENCH_FILES) >= 6, BENCH_FILES
+    schemas = {json.load(open(p))["metadata"].get("schema")
+               for p in BENCH_FILES}
+    assert None in schemas and 2 in schemas  # both eras represented
+
+
+def test_committed_trajectory_is_green():
+    findings = bench_compare.compare(_load_all(), max_time_ratio=5.0)
+    bad = [f for f in findings if not f["ok"]]
+    assert not bad, bench_compare.render(findings)
+    # the join actually compared things across PRs
+    assert sum(f["check"] == "us_per_call" for f in findings) >= 10
+    assert any(f["check"] == "overhead_frac" for f in findings)
+    assert any(f["check"] == "counter_consistent" for f in findings)
+
+
+def test_cli_green_and_regressed_exit_codes(tmp_path, capsys):
+    args = [str(p) for p in BENCH_FILES] + ["--max-time-ratio", "5"]
+    assert bench_compare.main(args) == 0
+    assert "all green" in capsys.readouterr().out
+
+    # clone the last point, regress a timing 10x and blow the budget
+    doc = json.load(open(BENCH_FILES[-1]))
+    for rec in doc["results"]:
+        if rec.get("us_per_call"):
+            rec["us_per_call"] *= 10
+        if rec.get("overhead_frac") is not None:
+            rec["overhead_frac"] = 0.5
+    bad_path = tmp_path / "BENCH_regressed.json"
+    bad_path.write_text(json.dumps(doc))
+    rc = bench_compare.main(args[:-2] + [str(bad_path),
+                                         "--max-time-ratio", "5"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL" in out and "us_per_call" in out
+    assert "overhead_frac" in out
+
+
+def test_time_ratio_threshold_boundaries():
+    prev = {"kind": "kernel", "name": "k", "us_per_call": 100.0}
+    cur_ok = {"kind": "kernel", "name": "k", "us_per_call": 199.0}
+    cur_bad = {"kind": "kernel", "name": "k", "us_per_call": 201.0}
+    mk = bench_compare.normalize_record
+    green = bench_compare.compare([("a", [mk(prev)]), ("b", [mk(cur_ok)])])
+    assert all(f["ok"] for f in green)
+    red = bench_compare.compare([("a", [mk(prev)]), ("b", [mk(cur_bad)])])
+    f, = [f for f in red if f["check"] == "us_per_call"]
+    assert not f["ok"] and "2.01x" in f["detail"]
+
+
+def test_ratio_metrics_get_relative_plus_absolute_slack():
+    mk = bench_compare.normalize_record
+
+    def pair(p, c):
+        prev = mk({"kind": "event_gating", "name": "g",
+                   "traffic_ratio": p})
+        cur = mk({"kind": "event_gating", "name": "g",
+                  "traffic_ratio": c})
+        fs = bench_compare.compare([("a", [prev]), ("b", [cur])])
+        f, = [f for f in fs if f["check"] == "traffic_ratio"]
+        return f["ok"]
+
+    assert pair(0.50, 0.54)          # within 10% relative
+    assert not pair(0.50, 0.56)      # beyond both slacks
+    # tiny ratios get the absolute floor: 0.01 -> 0.03 is within +0.02
+    assert pair(0.01, 0.03)
+    assert not pair(0.01, 0.035)
+
+
+def test_overhead_budget_checks_every_record_not_just_latest():
+    mk = bench_compare.normalize_record
+    old = mk({"kind": "obs_overhead", "name": "o", "overhead_frac": 0.30})
+    new = mk({"kind": "obs_overhead", "name": "o", "overhead_frac": 0.01})
+    fs = bench_compare.compare([("a", [old]), ("b", [new])])
+    fracs = [f for f in fs if f["check"] == "overhead_frac"]
+    assert len(fracs) == 2
+    assert [f["ok"] for f in fracs] == [False, True]
+
+
+def test_schema1_records_normalize_onto_axis_contract():
+    label, recs = bench_compare.load_doc(
+        min(BENCH_FILES, key=lambda p: int(p.stem.split("pr")[1])))
+    for rec in recs:
+        for axis in bench_compare.AXES:
+            assert axis in rec, (rec.get("name"), axis)
+    # a default-filled schema-1 record joins a schema-2 record of the
+    # same measurement: same key
+    s1 = bench_compare.normalize_record({"kind": "kernel", "name": "k"})
+    s2 = bench_compare.normalize_record(
+        {"kind": "kernel", "name": "k", "devices": 1, "fuse_steps": 1,
+         "backend": None, "gate": None, "batch": None})
+    assert bench_compare.record_key(s1) == bench_compare.record_key(s2)
+
+
+def test_future_schema_is_refused():
+    doc = {"metadata": {"schema": bench_compare.SCHEMA_VERSION + 1},
+           "results": []}
+    with pytest.raises(ValueError, match="newer than this gate"):
+        bench_compare.load_doc(doc)
+    with pytest.raises(ValueError, match="neither a bench document"):
+        bench_compare.load_doc({"what": "ever"})
+
+
+def test_serve_summary_joins_the_trajectory():
+    summary = {
+        "mode": "async",
+        "steps_per_s": 50_000.0,
+        "meta": {"git_commit": "abc123", "bench_schema": 2,
+                 "axes": {"backend": "reference", "gate": None,
+                          "batch": 8, "devices": 1, "fuse_steps": 1}},
+    }
+    label, recs = bench_compare.load_doc(summary)
+    rec, = recs
+    assert rec["kind"] == "serve_summary" and rec["name"] == "serve/async"
+    assert rec["us_per_call"] == pytest.approx(20.0)
+    assert rec["backend"] == "reference" and rec["batch"] == 8
+
+    # a later summary 10x slower on the same axes must fail the gate
+    slow = copy.deepcopy(summary)
+    slow["steps_per_s"] = 5_000.0
+    fs = bench_compare.compare([bench_compare.load_doc(summary),
+                                bench_compare.load_doc(slow)])
+    f, = [f for f in fs if f["check"] == "us_per_call"]
+    assert not f["ok"]

@@ -431,3 +431,41 @@ def test_snapshot_waiting_stream_raises(rng):
     server.attach("waiter")
     with pytest.raises(ValueError, match="waiting"):
         server.snapshot_stream("waiter")
+
+
+def test_traced_migration_hop_reconstructs_violation_free(rng):
+    """Lifecycle audit riding the migration contract: both servers share
+    one SpanTracer through attach / feed / cross-server hop /
+    intra-server migrate_stream / retire, and the timeline
+    reconstruction — which hard-errors on illegal transitions, leaks, or
+    retire-without-admit — accepts the trace with the expected
+    park/admission/migration counts on the single stream identity."""
+    from repro.obs import SpanTracer
+    from repro.obs.timeline import reconstruct
+
+    tracer = SpanTracer()
+    e = _engine(rng)
+    conn = InMemoryCarryConnector()
+    a = SpikeServer(e, n_slots=3, chunk_steps=5, tracer=tracer)
+    b = SpikeServer(e, n_slots=4, chunk_steps=3, tracer=tracer)
+    ext = _raster(rng, 14, e.n_inputs)
+
+    uid = a.attach("mig")
+    first = a.feed({uid: ext[:6]})[uid]["spikes"]
+    a.detach_stream(uid, conn)                # park on A
+    b.attach_stream(conn, uid)                # resumed admit on B
+    migrate_stream(b, uid, slot=3)            # address change on B
+    second = b.feed({uid: ext[6:]})[uid]["spikes"]
+    b.detach(uid, reason="done")
+
+    want = np.asarray(e.run(ext[:, None, :])["spikes"])[:, 0]
+    got = np.concatenate([np.asarray(first), np.asarray(second)])
+    np.testing.assert_array_equal(got, want)  # audit never bends bytes
+
+    rep = reconstruct(tracer)                 # raises on any violation
+    st = rep.stream("mig")
+    assert st.state == "retired" and st.outcome == "done"
+    assert st.n_parks == 2                    # hop + intra-server move
+    assert st.n_admissions == 3
+    assert st.n_migrations == 1
+    assert rep.by_state() == {"retired": 1}

@@ -141,6 +141,75 @@ def test_snapshot_is_json_able_and_complete():
     assert "+Inf" in hist["samples"][0]["buckets"]
 
 
+def test_prometheus_label_value_escaping():
+    # the text exposition format escapes backslash, newline and double
+    # quote in label VALUES — an unescaped one silently corrupts the
+    # scrape, so pin each case (and their combination) byte-exactly
+    reg = MetricsRegistry()
+    fam = reg.counter("snn_frontend_requests_total")
+    fam.labels(outcome='say "hi"').inc()
+    fam.labels(outcome="a\\b").inc(2)
+    fam.labels(outcome="two\nlines").inc(3)
+    fam.labels(outcome='mix\\"\n').inc(4)
+    text = reg.to_prometheus()
+    assert r'outcome="say \"hi\""' in text
+    assert r'outcome="a\\b"' in text
+    assert r'outcome="two\nlines"' in text
+    assert r'outcome="mix\\\"\n"' in text
+    # negative: the raw bytes must NOT leak through
+    assert 'outcome="say "hi""' not in text
+    assert "two\nlines" not in text
+    for line in text.splitlines():
+        if not line.startswith("#"):
+            assert "\n" not in line  # tautology post-split; shape guard
+            assert line == line.strip()
+
+
+def test_prometheus_help_escaping_backslash_and_newline():
+    # HELP text escapes backslash + newline (quotes stay literal); a
+    # registry with a hostile help string must still emit parseable
+    # line-oriented exposition
+    reg = MetricsRegistry()
+    spec = MetricSpec("snn_test_escape_total", "counter",
+                      'multi\nline \\ "quoted"')
+    reg.register(spec)
+    text = reg.to_prometheus()
+    assert r'# HELP snn_test_escape_total multi\nline \\ "quoted"' in text
+    # every physical line still starts with a name or a comment marker
+    for line in text.splitlines():
+        assert line.startswith("#") or line[0].isalpha()
+
+
+def test_histogram_bucket_edge_is_inclusive():
+    # `le` means <=: a value landing EXACTLY on a bucket edge counts in
+    # that bucket, not the next one up
+    reg = MetricsRegistry()
+    h = reg.histogram("snn_server_chunk_latency_seconds")
+    h.observe(LATENCY_BUCKETS[1])
+    child = h._require_default()
+    assert child.bucket_counts[0] == 0
+    assert child.bucket_counts[1] == 1
+    assert sum(child.bucket_counts) == 1
+    # and the cumulative exposition agrees from that edge upward
+    lines = [ln for ln in reg.to_prometheus().splitlines()
+             if "_bucket{" in ln]
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in lines]
+    assert counts[0] == 0 and counts[1] == 1 and counts[-1] == 1
+
+
+def test_timer_observes_even_when_body_raises():
+    clk = FakeClock()
+    reg = MetricsRegistry(clock=clk)
+    with pytest.raises(RuntimeError):
+        with reg.timer("snn_server_chunk_latency_seconds"):
+            clk.t += 0.75
+            raise RuntimeError("body blew up")
+    child = reg.histogram("snn_server_chunk_latency_seconds") \
+        ._require_default()
+    assert child.count == 1
+    assert child.sum == pytest.approx(0.75)
+
+
 def test_registries_are_isolated_and_global_is_swappable():
     a, b = MetricsRegistry(), MetricsRegistry()
     a.counter("snn_server_steps_total").inc(5)

@@ -1,0 +1,311 @@
+"""SLO watchdog + flight recorder: burn rates, breach edges, post-mortems.
+
+The watchdog evaluates declarative objectives as rolling windows on the
+injectable clock and is purely observational — with it (and the flight
+recorder, and a tracer) attached, the frontend's output bytes are
+pinned identical to a bare run. Breaches are EDGE-triggered: one
+counter bump and one callback per transition into breach, no matter how
+many evaluations happen while breaching. The flight recorder is a
+bounded ring (tracer sink + metric deltas) whose dump is a best-effort
+post-mortem: it must never raise out of a crash path.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import DecaySpec, SpikeEngine
+from repro.obs import (FlightRecorder, MetricsRegistry, SLObjective,
+                       SLOStatus, SLOWatchdog, SpanTracer)
+from repro.serving.frontend import AsyncSpikeFrontend
+from repro.serving.snn import SpikeServer
+
+THRESH = 1 << 16
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _engine(rng, *, n_in=10, n_phys=16, wmax=1 << 13):
+    S = n_in + n_phys
+    W = ((rng.random((S, n_phys)) < 0.4)
+         * rng.integers(-wmax, wmax, (S, n_phys)))
+    return SpikeEngine(jnp.asarray(W, jnp.int32), n_in,
+                       decay=DecaySpec.shift(0.25), threshold_raw=THRESH,
+                       reset_mode="subtract", backend="reference")
+
+
+def _raster(rng, T, n_in, p=0.35):
+    return (rng.random((T, n_in)) < p).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# objectives and the watchdog, on a virtual clock
+# --------------------------------------------------------------------------
+
+def test_objective_validation():
+    with pytest.raises(ValueError, match="unknown SLO kind"):
+        SLObjective("x", "latency_p50", 0.1)
+    with pytest.raises(ValueError, match="threshold"):
+        SLObjective("x", "latency_p99", 0.0)
+    with pytest.raises(ValueError, match="window_s"):
+        SLObjective("x", "latency_p99", 0.1, window_s=-1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOWatchdog([SLObjective("a", "latency_p99", 0.1),
+                     SLObjective("a", "queue_depth", 4)])
+
+
+def test_latency_p99_burn_rate_and_windowing():
+    clk = VirtualClock()
+    dog = SLOWatchdog([SLObjective("lat", "latency_p99", 0.100,
+                                   window_s=10.0)], clock=clk)
+    # no data: burn 0, not breached
+    s, = dog.check()
+    assert s.value is None and s.burn_rate == 0.0 and not s.breached
+
+    for _ in range(10):
+        dog.record_done(0.050)
+    s, = dog.check()
+    assert s.value == pytest.approx(0.050)
+    assert s.burn_rate == pytest.approx(0.5)
+    assert not s.breached and s.n_samples == 10
+
+    dog.record_done(0.500)           # one slow request breaks p99
+    s, = dog.check()
+    assert s.burn_rate > 1.0 and s.breached
+
+    clk.t = 11.0                     # the window rolls everything out
+    s, = dog.check()
+    assert s.value is None and not s.breached
+
+
+def test_miss_ratio_counts_misses_over_completions():
+    clk = VirtualClock()
+    dog = SLOWatchdog([SLObjective("miss", "miss_ratio", 0.10,
+                                   window_s=60.0)], clock=clk)
+    for _ in range(9):
+        dog.record_done(0.01)
+    dog.record_miss()
+    s, = dog.check()
+    assert s.value == pytest.approx(0.1)
+    assert s.burn_rate == pytest.approx(1.0)
+    assert not s.breached            # breach is strictly > 1
+    dog.record_miss()
+    s, = dog.check()
+    assert s.breached and s.n_samples == 11
+
+
+def test_queue_depth_takes_the_window_max():
+    clk = VirtualClock()
+    dog = SLOWatchdog([SLObjective("depth", "queue_depth", 4,
+                                   window_s=5.0)], clock=clk)
+    for d in (1, 5, 2):
+        dog.record_queue_depth(d)
+    s, = dog.check()
+    assert s.value == 5.0 and s.breached
+    clk.t = 6.0                      # the depth-5 sample ages out
+    dog.record_queue_depth(3)
+    s, = dog.check()
+    assert s.value == 3.0 and not s.breached
+
+
+def test_breach_is_edge_triggered_with_registry_and_callbacks():
+    clk = VirtualClock()
+    reg = MetricsRegistry(clock=clk)
+    fired = []
+    dog = SLOWatchdog([SLObjective("depth", "queue_depth", 2,
+                                   window_s=2.0)],
+                      clock=clk, registry=reg, on_breach=fired.append)
+    ctr = reg.counter("snn_slo_breaches_total").labels(objective="depth")
+    gauge = reg.gauge("snn_slo_burn_rate").labels(objective="depth")
+
+    dog.record_queue_depth(10)
+    for _ in range(5):
+        dog.check()                  # breaching the whole time
+    assert ctr.value == 1            # ONE onset, not five
+    assert len(fired) == 1 and isinstance(fired[0], SLOStatus)
+    assert gauge.value == pytest.approx(5.0)
+
+    clk.t = 3.0                      # recover...
+    dog.check()
+    assert gauge.value == 0.0
+    dog.record_queue_depth(10)       # ...and breach again: a NEW onset
+    dog.check()
+    assert ctr.value == 2 and len(fired) == 2
+
+
+def test_report_is_a_pure_read():
+    clk = VirtualClock()
+    fired = []
+    dog = SLOWatchdog([SLObjective("depth", "queue_depth", 2)],
+                      clock=clk, on_breach=fired.append)
+    dog.record_queue_depth(9)
+    rep = dog.report()
+    obj, = rep["objectives"]
+    assert obj["breached"] and obj["burn_rate"] == pytest.approx(4.5)
+    assert rep["breaches"] == {"depth": 0}   # report() never counts
+    assert fired == []                       # ...and never fires
+    dog.check()
+    assert dog.report()["breaches"] == {"depth": 1}
+    assert json.loads(json.dumps(rep))       # summary-embeddable
+
+
+# --------------------------------------------------------------------------
+# frontend wiring, on the virtual clock
+# --------------------------------------------------------------------------
+
+def test_frontend_feeds_watchdog_latencies_misses_and_depth(rng):
+    engine = _engine(rng)
+    clock = VirtualClock()
+    dog = SLOWatchdog([SLObjective("lat", "latency_p99", 5.0),
+                       SLObjective("miss", "miss_ratio", 0.5),
+                       SLObjective("depth", "queue_depth", 50)],
+                      clock=clock)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=4)
+    fe = AsyncSpikeFrontend(server, queue_capacity=8, clock=clock,
+                            slo=dog)
+    ok = fe.submit(_raster(rng, 4, engine.n_inputs))
+    late = fe.submit(_raster(rng, 8, engine.n_inputs), deadline_ms=1_000)
+    clock.t = 0.5
+    fe.pump()                        # ok served (4 steps = one chunk)
+    clock.t = 2.0                    # late's deadline passes while queued
+    fe.drain()
+    assert ok.state == "done" and late.state == "expired"
+
+    rep = dog.report()
+    by = {o["name"]: o for o in rep["objectives"]}
+    assert by["lat"]["n_samples"] == 1       # one completion recorded
+    assert by["lat"]["value"] == pytest.approx(0.5)
+    assert by["miss"]["value"] == pytest.approx(0.5)  # 1 miss / 2
+    assert by["depth"]["n_samples"] >= 1     # sampled every round
+    assert fe.slo is dog
+
+
+def test_slo_and_flight_never_change_the_bytes(rng):
+    """The whole analysis tier attached — watchdog (with an impossible
+    objective, so it breaches), flight recorder, tracer, registry — and
+    the served rasters are byte-identical to a bare frontend's."""
+    engine = _engine(rng)
+    rasters = [_raster(rng, T, engine.n_inputs) for T in (7, 4, 9)]
+
+    def run(instrumented):
+        clock = VirtualClock()
+        server_kw, fe_kw = {}, {}
+        recorder = None
+        if instrumented:
+            reg = MetricsRegistry(clock=clock)
+            recorder = FlightRecorder(clock=clock)
+            tracer = SpanTracer(clock=clock, sink=recorder)
+            dog = SLOWatchdog(
+                [SLObjective("lat", "latency_p99", 1e-9)],  # always hot
+                clock=clock, registry=reg,
+                on_breach=recorder.on_breach)
+            server_kw = dict(metrics=reg, tracer=tracer)
+            fe_kw = dict(metrics=reg, tracer=tracer, slo=dog)
+        server = SpikeServer(engine, n_slots=2, chunk_steps=3,
+                             **server_kw)
+        fe = AsyncSpikeFrontend(server, queue_capacity=8, clock=clock,
+                                **fe_kw)
+        handles = [fe.submit(r) for r in rasters]
+        while not fe.idle:
+            clock.t += 1.0
+            fe.pump()
+            if recorder is not None:
+                recorder.note_metrics(server.metrics)
+        return [h.result()["spikes"] for h in handles], recorder
+
+    bare, _ = run(False)
+    full, recorder = run(True)
+    for b, f in zip(bare, full):
+        np.testing.assert_array_equal(b, f)
+    assert recorder.n_dumps >= 1     # the impossible objective breached
+
+
+# --------------------------------------------------------------------------
+# flight recorder
+# --------------------------------------------------------------------------
+
+def test_ring_keeps_only_the_last_n_spans():
+    clk = VirtualClock()
+    rec = FlightRecorder(capacity=3, clock=clk)
+    tracer = SpanTracer(clock=clk, sink=rec)
+    for i in range(7):
+        tracer.event("queued", i, steps=1)
+    assert [s["uid"] for s in rec.spans] == [4, 5, 6]
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(capacity=0)
+
+
+def test_note_metrics_records_scalar_deltas_only():
+    clk = VirtualClock()
+    reg = MetricsRegistry(clock=clk)
+    rec = FlightRecorder(clock=clk)
+    first = rec.note_metrics(reg)    # every pre-registered scalar
+    assert first > 0                 # series is a first sighting...
+    assert all(d["delta"] is None for d in rec.deltas)
+    assert not any("latency" in d["metric"] for d in rec.deltas)
+    assert rec.note_metrics(reg) == 0        # ...then nothing moved
+
+    reg.counter("snn_server_steps_total").inc(5)
+    reg.histogram("snn_server_chunk_latency_seconds").observe(0.1)
+    assert rec.note_metrics(reg) == 1        # histograms are skipped
+    d = rec.deltas[-1]
+    assert d["metric"] == "snn_server_steps_total"
+    assert d["value"] == 5 and d["delta"] == 5
+    reg.counter("snn_server_steps_total").inc(2)
+    rec.note_metrics(reg)
+    assert rec.deltas[-1]["delta"] == 2
+
+
+def test_dump_writes_post_mortem_with_inflight_timeline(tmp_path):
+    clk = VirtualClock()
+    rec = FlightRecorder(clock=clk, path=str(tmp_path / "flight.json"))
+    tracer = SpanTracer(clock=clk, sink=rec)
+    tracer.event("queued", "a", steps=4)
+    tracer.event("admitted", "a", slot=0)    # still running: in-flight
+
+    doc = rec.dump(reason="why-not")
+    on_disk = json.load(open(tmp_path / "flight.json"))
+    assert on_disk["reason"] == doc["reason"] == "why-not"
+    assert len(on_disk["spans"]) == 2
+    # the timeline is best-effort: in-flight streams are NOT violations
+    assert on_disk["timeline"]["violations"] == []
+    assert on_disk["timeline"]["by_state"] == {"running": 1}
+    assert rec.n_dumps == 1
+
+
+def test_armed_dumps_on_crash_and_reraises(tmp_path):
+    clk = VirtualClock()
+    rec = FlightRecorder(clock=clk)
+    tracer = SpanTracer(clock=clk, sink=rec)
+    path = tmp_path / "crash.json"
+    with pytest.raises(RuntimeError, match="boom"):
+        with rec.armed(str(path)):
+            tracer.event("queued", "a", steps=1)
+            raise RuntimeError("boom")
+    doc = json.load(open(path))
+    assert doc["reason"] == "crash:RuntimeError"
+    assert doc["extra"]["error"] == "boom"
+    assert len(doc["spans"]) == 1
+
+
+def test_on_breach_hook_dumps_with_the_status(tmp_path):
+    clk = VirtualClock()
+    rec = FlightRecorder(clock=clk, path=str(tmp_path / "breach.json"))
+    dog = SLOWatchdog([SLObjective("depth", "queue_depth", 1)],
+                      clock=clk, on_breach=rec.on_breach)
+    dog.record_queue_depth(99)
+    dog.check()
+    doc = json.load(open(tmp_path / "breach.json"))
+    assert doc["reason"] == "slo-breach:depth"
+    assert doc["extra"]["burn_rate"] == pytest.approx(99.0)
+    assert rec.n_dumps == 1
+    dog.check()                      # still breaching: no second dump
+    assert rec.n_dumps == 1

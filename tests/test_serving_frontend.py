@@ -623,3 +623,52 @@ def test_metrics_shape_on_all_expired_run(rng):
     assert m["counts"]["expired_queued"] == 2
     assert m["service"]["p50"] is None and m["total"]["p50"] is None
     assert m["rounds"] == 1
+
+
+def test_traced_spill_flow_reconstructs_violation_free(rng):
+    """Lifecycle audit over the representative front-door flow: server
+    and frontend share one SpanTracer through submit / cancel-queued /
+    queued-expiry / mid-stream spill / resume / drain, and the timeline
+    reconstruction — which hard-errors on any illegal transition, leaked
+    stream, or retire-without-admit — accepts the whole trace with the
+    expected outcomes on both the request and the server domain."""
+    from repro.obs import SpanTracer
+    from repro.obs.timeline import reconstruct
+    from repro.serving.connector import InMemoryCarryConnector
+
+    engine = _engine(rng)
+    clock = VirtualClock()
+    tracer = SpanTracer(clock=clock)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2, tracer=tracer)
+    fe = AsyncSpikeFrontend(server, queue_capacity=8, clock=clock,
+                            connector=InMemoryCarryConnector(),
+                            tracer=tracer)
+    spill, plain, victim, late = _rasters(rng, (10, 4, 6, 5),
+                                          engine.n_inputs)
+    a = fe.submit(spill, deadline_ms=1_000)   # parks mid-stream
+    b = fe.submit(plain)                      # queued behind a
+    c = fe.submit(victim)                     # cancelled while queued
+    d = fe.submit(late, deadline_ms=1_500)    # expires while queued
+    assert c.cancel() is True
+    fe.pump()                                 # a runs 2 of 10 steps
+    clock.t = 2.0                             # both deadlines pass
+    fe.pump()
+    assert a.state == "parked" and d.state == "expired"
+    fe.drain()                                # b completes
+    assert fe.resume(a) is True
+    fe.drain()
+    assert a.state == "done"
+
+    rep = reconstruct(tracer)                 # raises on any violation
+    outcomes = {h: rep.stream(h.rid, domain="request").outcome
+                for h in (a, b, c, d)}
+    assert outcomes == {a: "done", b: "done",
+                        c: "cancelled", d: "expired"}
+    spilled = rep.stream(a.rid, domain="request")
+    assert spilled.n_parks == 1 and spilled.n_admissions == 2
+    # every timeline closed legally: all four requests retired, plus
+    # three server streams — b's, a's resumed incarnation (resume mints
+    # a fresh server uid off the snapshot), and a's FIRST incarnation,
+    # which legally ends 'parked' (its carry continued under the new
+    # uid; the request domain is the continuous thread)
+    assert rep.by_state() == {"retired": 6, "parked": 1}
