@@ -374,6 +374,103 @@ def bench_async_frontend(backends, *, n_slots: int = 8,
                  per_timestep=True)
 
 
+def bench_qos_frontend(backends, *, n_slots: int = 4, chunk_steps: int = 8,
+                       T: int = 32, n_bg: int = 16, n_hi: int = 8,
+                       activity: float = 0.05) -> None:
+    """The multi-tenant QoS axis: per-class latency isolation.
+
+    Drives the SAME adversarial 2-class traffic plan through three front
+    doors on a virtual clock (1 unit per pump round): a background class
+    trickling in at the slot service rate while a bursty class lands all
+    its requests at once mid-run. ``fifo`` ignores the classes (the
+    PR 5 baseline — the burst waits behind the backlog), ``wfq`` ranks
+    the burst class into a higher priority stratum with a 4x weight, and
+    ``preempt`` additionally sheds running background streams through
+    the connector. Per-class p99 total latency (in rounds) is the
+    deliverable: the QoS claim — high-priority p99 strictly below the
+    FIFO baseline at the SAME offered load — is ENFORCED on the
+    reference backend (deterministic virtual-clock schedule), not just
+    recorded.
+    """
+    from repro.serving.connector import InMemoryCarryConnector
+    from repro.serving.qos import QoSClass, QoSPolicy
+
+    rng = np.random.default_rng(0)
+    n_in, P = 784, 1024
+    W = jnp.asarray(rng.integers(-2**13, 2**13, (n_in + P, P)), jnp.int32)
+    rasters = [(rng.random((T, n_in)) < activity).astype(np.int32)
+               for _ in range(n_bg + n_hi)]
+    # deterministic plan: the background class arrives at 2x the slot
+    # service rate (n_slots*chunk_steps/T = 1 stream per round here), so
+    # a backlog is already deep when every hi request lands at once at
+    # round 6 — FIFO makes the burst wait behind that backlog; QoS must
+    # not
+    plan = sorted([(0.5 * i, "bg", rasters[i]) for i in range(n_bg)]
+                  + [(6.0, "hi", rasters[n_bg + i])
+                     for i in range(n_hi)], key=lambda e: e[0])
+    scenarios = [
+        ("fifo", None),
+        ("wfq", QoSPolicy(classes={"hi": QoSClass(priority=1, weight=4),
+                                   "bg": QoSClass(priority=0, weight=1)})),
+        ("preempt", QoSPolicy(
+            classes={"hi": QoSClass(priority=1, weight=4),
+                     "bg": QoSClass(priority=0, weight=1)},
+            preempt=True)),
+    ]
+    for backend in backends:
+        engine = SpikeEngine(W, n_in, decay=DecaySpec.shift(0.25),
+                             threshold_raw=1 << 16, reset_mode="zero",
+                             backend=backend)
+        fifo_hi_p99 = None
+        for scenario, policy in scenarios:
+            server = SpikeServer(engine, n_slots=n_slots,
+                                 chunk_steps=chunk_steps)
+            t_virtual = [0.0]
+            fe = AsyncSpikeFrontend(
+                server, queue_capacity=n_bg + n_hi + 1,
+                clock=lambda t=t_virtual: t[0], qos=policy,
+                connector=(InMemoryCarryConnector()
+                           if policy is not None and policy.preempt
+                           else None))
+            i = 0
+            t0 = time.perf_counter()
+            while i < len(plan) or not fe.idle:
+                while i < len(plan) and plan[i][0] <= t_virtual[0]:
+                    fe.submit(plan[i][2], tenant=plan[i][1])
+                    i += 1
+                fe.pump()
+                t_virtual[0] += 1.0
+            wall = time.perf_counter() - t0
+            m = fe.metrics()
+            hi, bg = m["by_class"]["hi"], m["by_class"]["bg"]
+            hi_p99, bg_p99 = hi["total"]["p99"], bg["total"]["p99"]
+            if scenario == "fifo":
+                fifo_hi_p99 = hi_p99
+            emit(f"qos/frontend_{backend}_{scenario}",
+                 wall * 1e6 / max(server.total_steps, 1),
+                 f"hi p99 {hi_p99:g} rounds vs bg {bg_p99:g} (fifo hi "
+                 f"{fifo_hi_p99:g}); {m['counts']['done']}/{len(plan)} "
+                 f"done, {m['counts']['evicted']} preempted",
+                 kind="qos_frontend", backend=backend, scenario=scenario,
+                 n_requests=len(plan), n_slots=n_slots,
+                 chunk_steps=chunk_steps,
+                 hi_p99_rounds=hi_p99, bg_p99_rounds=bg_p99,
+                 hi_p50_rounds=hi["total"]["p50"],
+                 bg_p50_rounds=bg["total"]["p50"],
+                 fifo_hi_p99_rounds=fifo_hi_p99,
+                 done=m["counts"]["done"],
+                 evicted=m["counts"]["evicted"],
+                 parked=m["counts"]["parked"],
+                 per_timestep=True)
+            if (backend == "reference" and scenario != "fifo"
+                    and not hi_p99 < fifo_hi_p99):
+                raise SystemExit(
+                    f"QoS isolation claim failed: {scenario} hi-class "
+                    f"p99 {hi_p99:g} rounds is not strictly below the "
+                    f"FIFO baseline {fifo_hi_p99:g} at the same offered "
+                    f"load")
+
+
 def bench_migration(backends, *, n_slots: int = 8, chunk_steps: int = 8,
                     activity: float = 0.05) -> None:
     """The migration-overhead axis: what a stream-state move costs.
@@ -567,6 +664,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "per K x backend x sparsity x occupancy, with "
                          "the trace window-OR count cross-checked "
                          "against the kernel's gate scalars (e.g. 1,4,8)")
+    ap.add_argument("--qos", action="store_true",
+                    help="also benchmark the multi-tenant QoS front door: "
+                         "the same adversarial burst-over-background "
+                         "traffic through FIFO vs WFQ vs preemptive "
+                         "admission on a virtual clock, recording "
+                         "per-class p99 total latency — the isolation "
+                         "claim (high-priority p99 strictly below the "
+                         "FIFO baseline) is ENFORCED on the reference "
+                         "backend")
     ap.add_argument("--migrate", action="store_true",
                     help="also benchmark stream-state migration overhead: "
                          "per-stream carry snapshot latency, in-memory and "
@@ -657,6 +763,8 @@ def main(argv=None) -> None:
                             activity=args.activity, mesh=mesh)
     if args.async_mode:
         bench_async_frontend(backends, activity=args.activity)
+    if args.qos:
+        bench_qos_frontend(backends, activity=args.activity)
     if args.migrate:
         bench_migration(backends, activity=args.activity)
     if args.obs_overhead:
@@ -718,7 +826,8 @@ def main(argv=None) -> None:
             host_devices_forced=args.devices if args.devices > 1 else None,
             args={"batch": args.batch, "activity": args.activity,
                   "backend": args.backend, "streaming": args.streaming,
-                  "async": args.async_mode, "sparsity": args.sparsity,
+                  "async": args.async_mode, "qos": args.qos,
+                  "sparsity": args.sparsity,
                   "fuse_steps": args.fuse_steps, "migrate": args.migrate,
                   "obs_overhead": args.obs_overhead,
                   "devices": args.devices, "mesh": args.mesh},

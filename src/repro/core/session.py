@@ -384,22 +384,27 @@ class AcceleratorSession:
                     server, queue_capacity=cfg.queue_capacity,
                     backpressure=cfg.backpressure,
                     deadline_ms=cfg.deadline_ms,
-                    connector=(self.connector if cfg.spill else None),
+                    connector=(self.connector
+                               if cfg.spill or (cfg.qos is not None
+                                                and cfg.qos.preempt)
+                               else None),
                     metrics=self.metrics, tracer=self.tracer,
-                    slo=cfg.slo)
+                    slo=cfg.slo, qos=cfg.qos)
                 self._frontends[key] = fe
             elif (fe.queue_capacity, fe.backpressure,
-                  fe.default_deadline_ms,
-                  fe.connector is not None) != (cfg.queue_capacity,
-                                                cfg.backpressure,
-                                                cfg.deadline_ms,
-                                                cfg.spill):
+                  fe.default_deadline_ms, fe.qos,
+                  fe.connector is not None) != (
+                      cfg.queue_capacity, cfg.backpressure,
+                      cfg.deadline_ms, cfg.qos,
+                      cfg.spill or (cfg.qos is not None
+                                    and cfg.qos.preempt)):
                 raise ValueError(
                     f"group {group_key[0]} already has a frontend with "
                     f"queue_capacity={fe.queue_capacity}, "
                     f"backpressure={fe.backpressure!r}, "
                     f"deadline_ms={fe.default_deadline_ms}, "
-                    f"spill={fe.connector is not None}; co-resident "
+                    f"spill={fe.connector is not None}, "
+                    f"qos={fe.qos}; co-resident "
                     f"views must share one request queue")
         ext_offset = 0
         for m in group:

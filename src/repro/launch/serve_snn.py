@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import json
 import pathlib
 import subprocess
@@ -48,6 +49,7 @@ from repro.obs import (FlightRecorder, MetricsRegistry, SLObjective,
                        SLOWatchdog, SpanTracer, set_registry)
 from repro.obs.tracing import profile_trace
 from repro.serving.frontend import BACKPRESSURE, FrontendConfig
+from repro.serving.qos import QoSClass, QoSPolicy
 
 
 def make_net(rng, n_in: int, n_neurons: int, *, density: float = 0.25,
@@ -186,6 +188,35 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--queue-capacity", type=int, default=32,
                     help="bounded frontend request queue (--async only); "
                          "backpressure engages beyond it")
+    ap.add_argument("--qos", default=None, metavar="SPEC",
+                    help="multi-tenant QoS admission (--async only): a "
+                         "comma list of NAME=PRIO:WEIGHT[:QUOTA[:RATE"
+                         "[:BURST]]] tenant classes (strict priority "
+                         "strata, weighted fair queueing inside one, "
+                         "optional concurrent-slot quota and token-bucket "
+                         "rate limit). Requests are assigned tenants "
+                         "round-robin over the classes; omit for the "
+                         "plain FIFO front door")
+    ap.add_argument("--qos-preempt", action="store_true",
+                    help="SLO-aware eviction (--qos only): under overload "
+                         "a queued request whose class strictly outranks "
+                         "a running stream sheds the lowest-priority "
+                         "running stream — its carry is PARKED through "
+                         "the connector and resumes bit-clean, never "
+                         "dropped")
+    ap.add_argument("--burst", default=None, metavar="NAME",
+                    help="adversarial traffic mix (--async only): the "
+                         "NAME tenant's requests abandon the Poisson plan "
+                         "and arrive as one dense burst at --burst-at, "
+                         "spaced by --burst-rate, on top of the "
+                         "background load — the overload that makes "
+                         "per-class isolation measurable")
+    ap.add_argument("--burst-rate", type=float, default=None,
+                    help="arrivals per second inside the burst "
+                         "(default: 10x --arrival-rate)")
+    ap.add_argument("--burst-at", type=float, default=None,
+                    help="burst start time in seconds (default: 25%% "
+                         "into the background arrival span)")
     ap.add_argument("--slo-p99-ms", type=float, default=None,
                     help="SLO objective (--async only): p99 total "
                          "(submit-to-retire) latency must stay under this "
@@ -264,6 +295,53 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _parse_qos(spec: str, *, preempt: bool = False) -> QoSPolicy:
+    """``NAME=PRIO:WEIGHT[:QUOTA[:RATE[:BURST]]],...`` -> QoSPolicy.
+
+    Empty optional fields keep their defaults, e.g.
+    ``hi=2:4,bg=0:1:2:0.5`` is a 2-stratum policy whose background class
+    is capped at 2 slots and 0.5 admissions/s.
+    """
+    classes = {}
+    for entry in spec.split(","):
+        entry = entry.strip()
+        name, eq, rest = entry.partition("=")
+        parts = rest.split(":")
+        if not name or not eq or len(parts) < 2 or len(parts) > 5:
+            raise SystemExit(
+                f"--qos entry {entry!r} is not "
+                f"NAME=PRIO:WEIGHT[:QUOTA[:RATE[:BURST]]]")
+        try:
+            classes[name.strip()] = QoSClass(
+                priority=int(parts[0]),
+                weight=int(parts[1]),
+                max_slots=(int(parts[2])
+                           if len(parts) > 2 and parts[2] else None),
+                rate_per_s=(float(parts[3])
+                            if len(parts) > 3 and parts[3] else None),
+                burst=(int(parts[4])
+                       if len(parts) > 4 and parts[4] else 1),
+            )
+        except ValueError as e:
+            raise SystemExit(f"--qos entry {entry!r}: {e}")
+    return QoSPolicy(classes=classes, preempt=preempt)
+
+
+def _assign_tenants(args, qos: QoSPolicy | None, n: int) -> list[str]:
+    """Deterministic tenant labels for the synthetic request plan:
+    round-robin over the QoS classes (declaration order), or over
+    {burst tenant, "default"} when only --burst shapes the traffic —
+    the FIFO baseline then offers the SAME per-tenant load a QoS run
+    does, so the two runs' per-class percentiles compare directly."""
+    if qos is not None and qos.classes:
+        names = list(qos.classes)
+    elif args.burst:
+        names = [args.burst, "default"]
+    else:
+        return ["default"] * n
+    return [names[i % len(names)] for i in range(n)]
+
+
 def _fmt_lat(stats: dict) -> str:
     """'mean X ms, p50 Y ms, p95 Z ms' from a latency_percentiles dict."""
     if stats["mean"] is None:
@@ -337,8 +415,9 @@ def _render_summary(s: dict) -> list[str]:
         if c["parked"]:
             lines.append(
                 f"[serve-snn] spill-on-evict: {c['parked']} mid-stream "
-                f"expiries parked their carry in the connector, "
-                f"{c['resumed']} resumed bit-clean (one retry each)")
+                f"evictions ({c['evicted']} QoS preemptions) parked "
+                f"their carry in the connector, {c['resumed']} resumed "
+                f"bit-clean")
         lines.append(
             f"[serve-snn] queue depth: max {fe['queue_depth']['max']}, "
             f"mean {fe['queue_depth']['mean']:.1f} "
@@ -346,6 +425,32 @@ def _render_summary(s: dict) -> list[str]:
         lines.append(f"[serve-snn] queue-wait: {_fmt_lat(fe['queue_wait'])}")
         lines.append(f"[serve-snn] service:    {_fmt_lat(fe['service'])}")
         lines.append(f"[serve-snn] total:      {_fmt_lat(fe['total'])}")
+        if s.get("qos"):
+            q = s["qos"]
+            lines.append(
+                f"[serve-snn] qos: {len(q['classes'])} tenant classes "
+                f"(quantum {q['quantum']}, preempt "
+                f"{'on' if q['preempt'] else 'off'})"
+                + (f"; burst tenant {s['burst']['tenant']!r}: "
+                   f"{s['burst']['requests']} requests at "
+                   f"{s['burst']['rate_per_s']:.1f}/s from "
+                   f"t={s['burst']['at_s']:.2f}s" if s.get("burst")
+                   else ""))
+        by_cls = fe.get("by_class") or {}
+        if not s.get("qos") and len(by_cls) < 2:
+            by_cls = {}          # single-tenant FIFO: the global lines say it all
+        for cls in sorted(by_cls):
+            d = by_cls[cls]
+            cc, tot = d["counts"], d["total"]
+            lat = ("total n/a (no samples)" if tot["p50"] is None else
+                   f"total p50 {tot['p50'] * 1e3:.1f} ms, "
+                   f"p95 {tot['p95'] * 1e3:.1f} ms, "
+                   f"p99 {tot['p99'] * 1e3:.1f} ms")
+            lines.append(
+                f"[serve-snn] class {cls}: {cc['done']} done, "
+                f"{cc['rejected'] + cc['dropped']} shed, "
+                f"{cc['expired']} expired, {cc['evicted']} preempted; "
+                f"{lat}")
         if s.get("slo"):
             parts = [f"{o['name']} burn {o['burn_rate']:.2f}"
                      + (" BREACHING" if o["breached"] else "")
@@ -500,18 +605,40 @@ def run_async(args, server, views, requests, rng, metrics,
               "summaries are sync-mode only; the async run reports the "
               "front-door metrics below (the engine itself is still "
               "sharded/gated as requested)")
+    tenants = _assign_tenants(args, fe.qos, len(requests))
     arrive_at = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                           len(requests)))
+    burst_plan = None
+    if args.burst:
+        # the burst tenant abandons the Poisson plan: its requests land
+        # as one dense train on top of the background load
+        burst_idx = [i for i, t in enumerate(tenants) if t == args.burst]
+        if not burst_idx:
+            raise SystemExit(
+                f"--burst {args.burst!r} matches no tenant (classes: "
+                f"{sorted(set(tenants))})")
+        at = (args.burst_at if args.burst_at is not None
+              else 0.25 * float(arrive_at[-1]))
+        rate = (args.burst_rate if args.burst_rate is not None
+                else 10.0 * args.arrival_rate)
+        for j, i in enumerate(burst_idx):
+            arrive_at[i] = at + j / rate
+        burst_plan = {"tenant": args.burst, "at_s": at,
+                      "rate_per_s": rate, "requests": len(burst_idx)}
+    # submissions happen in arrival-time order (the burst reorders it)
+    order = np.argsort(arrive_at, kind="stable")
+    plan = [(float(arrive_at[k]), requests[k][1], requests[k][2],
+             tenants[k]) for k in order]
     handles: list = []
     resumed: set = set()
     i = 0
     t0 = time.perf_counter()
-    while i < len(requests) or not fe.idle or any(
+    while i < len(plan) or not fe.idle or any(
             h.state == "parked" for h in handles):
         now = time.perf_counter() - t0
-        while i < len(requests) and arrive_at[i] <= now:
-            uid, name, spikes = requests[i]
-            handles.append(views[name].submit(spikes))
+        while i < len(plan) and plan[i][0] <= now:
+            _, name, spikes, tenant = plan[i]
+            handles.append(views[name].submit(spikes, tenant=tenant))
             i += 1
         # spill-on-evict (deadline + connector): a parked request's carry
         # sits in the connector; give each ONE resume — it continues
@@ -526,9 +653,9 @@ def run_async(args, server, views, requests, rng, metrics,
         if fe.idle:
             # nothing queued or running: open-loop means we wait for the
             # next ARRIVAL, not spin the step loop
-            if i < len(requests):
+            if i < len(plan):
                 time.sleep(min(0.05, max(
-                    0.0, arrive_at[i] - (time.perf_counter() - t0))))
+                    0.0, plan[i][0] - (time.perf_counter() - t0))))
             continue
         fe.pump()
         if recorder is not None:
@@ -539,10 +666,17 @@ def run_async(args, server, views, requests, rng, metrics,
     return {
         "mode": "async",
         "requests": len(requests),
-        "offered_rate_per_s": len(requests) / arrive_at[-1],
+        "offered_rate_per_s": len(requests) / plan[-1][0],
         "policy": args.backpressure,
         "queue_capacity": fe.queue_capacity,
         "deadline_ms": args.deadline_ms,
+        "qos": None if fe.qos is None else {
+            "classes": {name: dataclasses.asdict(spec)
+                        for name, spec in fe.qos.classes.items()},
+            "quantum": fe.qos.quantum,
+            "preempt": fe.qos.preempt,
+        },
+        "burst": burst_plan,
         "wall_s": wall,
         "steps": int(steps),
         "steps_per_s": steps / wall,
@@ -574,6 +708,26 @@ def main(argv=None) -> None:
         raise SystemExit("--slo-* objectives are --async only (the "
                          "frontend pump feeds the watchdog; the sync loop "
                          "has no request deadlines or admission queue)")
+    if ((args.qos or args.qos_preempt or args.burst
+         or args.burst_rate is not None or args.burst_at is not None)
+            and not args.async_mode):
+        raise SystemExit("--qos/--qos-preempt/--burst* shape the async "
+                         "admission queue; they require --async (the "
+                         "sync loop has no front door to arbitrate)")
+    if args.qos_preempt and not args.qos:
+        raise SystemExit("--qos-preempt needs a --qos policy: preemption "
+                         "is ranked by the tenant classes it declares")
+    if ((args.burst_rate is not None or args.burst_at is not None)
+            and not args.burst):
+        raise SystemExit("--burst-rate/--burst-at shape the --burst "
+                         "tenant's arrival train; name it with --burst")
+    qos_policy = (None if args.qos is None
+                  else _parse_qos(args.qos, preempt=args.qos_preempt))
+    if (args.burst and qos_policy is not None
+            and args.burst not in qos_policy.classes):
+        raise SystemExit(f"--burst {args.burst!r} is not a --qos class "
+                         f"({sorted(qos_policy.classes)}); the burst "
+                         f"tenant must be one the policy ranks")
 
     mesh = None
     if args.devices > 1:
@@ -632,8 +786,9 @@ def main(argv=None) -> None:
             deadline_ms=args.deadline_ms,
             # with a deadline, spill mid-stream expiries to the session
             # connector and resume each once instead of restarting
+            # (qos preemption wires the connector through qos.preempt)
             spill=args.deadline_ms is not None,
-            slo=slo)
+            slo=slo, qos=qos_policy)
     views = {name: sess.serve(name, n_slots=args.n_slots,
                               chunk_steps=args.chunk, gate=args.gate,
                               frontend=frontend_cfg)

@@ -120,10 +120,19 @@ METRIC_SPECS: dict[str, MetricSpec] = _specs(
     MetricSpec("snn_frontend_requests_total", "counter",
                "Requests by terminal-or-transition outcome: submitted, "
                "done, rejected, dropped, cancelled, expired, "
-               "expired_queued, expired_running, parked, resumed.",
+               "expired_queued, expired_running, parked, resumed, "
+               "evicted.",
                labels=("outcome",)),
+    MetricSpec("snn_frontend_class_outcomes_total", "counter",
+               "Same outcomes split per tenant class (the QoS class / "
+               "view name a request was submitted under).",
+               labels=("stream_class", "outcome")),
     MetricSpec("snn_frontend_queue_depth", "gauge",
                "Requests waiting in the admission queue right now."),
+    MetricSpec("snn_frontend_class_queue_depth", "gauge",
+               "Per-tenant-class admission queue depth (QoS frontends "
+               "only; every policy-declared class reports, zeros "
+               "included).", labels=("stream_class",)),
     MetricSpec("snn_frontend_rounds_total", "counter",
                "pump() rounds executed."),
     MetricSpec("snn_frontend_queue_wait_seconds", "histogram",

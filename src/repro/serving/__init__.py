@@ -46,6 +46,11 @@ from repro.serving.frontend import (  # noqa: E402  (re-export)
     FrontendConfig,
     RequestHandle,
 )
+from repro.serving.qos import (  # noqa: E402  (re-export)
+    QoSClass,
+    QoSPolicy,
+    WeightedFairQueue,
+)
 from repro.serving.snn import (  # noqa: E402  (re-export)
     ModelStream,
     SlotScheduler,
@@ -56,6 +61,7 @@ from repro.serving.snn import (  # noqa: E402  (re-export)
 __all__ = ["Request", "Completion", "BatchServer", "Scheduler",
            "SpikeServer", "SlotScheduler", "ModelStream", "StreamStats",
            "AsyncSpikeFrontend", "FrontendConfig", "RequestHandle",
+           "QoSClass", "QoSPolicy", "WeightedFairQueue",
            "CarryConnectorBase", "CarrySnapshot", "InMemoryCarryConnector",
            "FileCarryConnector", "migrate_stream", "rebalance_streams"]
 

@@ -48,6 +48,15 @@ Backpressure policies (queue full at ``submit``):
     ``"dropped"``) to make room; freshest-data semantics for sensor-like
     traffic where a stale stimulus is worthless.
 
+Admission is FIFO by default. Built with ``qos=`` (a
+:class:`repro.serving.qos.QoSPolicy`) the single deque becomes per-tenant
+queues under strict priority + weighted fair queueing, with slot quotas,
+token-bucket rate limits on the same injectable clock, and (with
+``preempt``) SLO-aware eviction that parks the lowest-priority running
+stream through the connector. QoS off is byte-identical to the FIFO
+path; QoS on keeps admission order and slot assignment a pure function
+of the op sequence (pinned by tests/test_serving_qos.py).
+
 Nothing here runs inside jit; the frontend is pure host-side bookkeeping
 around the already-compiled step (clock injectable for deterministic
 deadline tests).
@@ -62,6 +71,8 @@ import threading
 import time
 
 import numpy as np
+
+from repro.serving.qos import QoSPolicy, WeightedFairQueue, choose_victim
 
 __all__ = [
     "BACKPRESSURE",
@@ -93,6 +104,7 @@ _FRONTEND_IDS = itertools.count()
 OUTCOME_KEYS: tuple[str, ...] = (
     "submitted", "done", "rejected", "dropped", "cancelled",
     "expired", "expired_queued", "expired_running", "parked", "resumed",
+    "evicted",
 )
 
 
@@ -119,6 +131,13 @@ class FrontendConfig:
     #: once per round. Excluded from the shared-frontend conflict check:
     #: a watchdog observes, it does not shape admission.
     slo: object | None = None
+    #: optional :class:`repro.serving.qos.QoSPolicy` — multi-tenant
+    #: admission (priority classes, WFQ, quotas, rate limits, optional
+    #: preemptive eviction). None keeps the plain FIFO path, which is
+    #: byte-identical to a frontend built before QoS existed. Part of
+    #: the shared-frontend conflict check: co-resident views must agree
+    #: on the policy shaping their shared queue.
+    qos: QoSPolicy | None = None
 
 
 @dataclasses.dataclass
@@ -130,6 +149,7 @@ class _Request:
     view: object | None            # ModelStream for embed/decode, or None
     deadline: float | None         # absolute clock value, or None
     submitted_at: float
+    tenant: str = "default"        # QoS class / latency-histogram label
     events_capacity: int | None = None
     events_policy: str = "error"
     state: str = "queued"
@@ -192,15 +212,17 @@ class RequestHandle:
 
 
 def latency_percentiles(xs) -> dict:
-    """mean/p50/p95/max summary (seconds in, seconds out) of a latency
-    sample list; empty input yields an all-None dict."""
+    """mean/p50/p95/p99/max summary (seconds in, seconds out) of a
+    latency sample list; empty input yields an all-None dict."""
     if not len(xs):
-        return {"mean": None, "p50": None, "p95": None, "max": None}
+        return {"mean": None, "p50": None, "p95": None, "p99": None,
+                "max": None}
     a = np.asarray(xs, np.float64)
     return {
         "mean": float(a.mean()),
         "p50": float(np.percentile(a, 50)),
         "p95": float(np.percentile(a, 95)),
+        "p99": float(np.percentile(a, 99)),
         "max": float(a.max()),
     }
 
@@ -229,7 +251,7 @@ class AsyncSpikeFrontend:
                  backpressure: str = "reject",
                  deadline_ms: float | None = None,
                  clock=time.perf_counter, connector=None,
-                 metrics=None, tracer=None, slo=None):
+                 metrics=None, tracer=None, slo=None, qos=None):
         if queue_capacity <= 0:
             raise ValueError(
                 f"queue_capacity must be positive, got {queue_capacity}")
@@ -240,6 +262,15 @@ class AsyncSpikeFrontend:
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(
                 f"deadline_ms must be positive, got {deadline_ms}")
+        if qos is not None and not isinstance(qos, QoSPolicy):
+            raise TypeError(
+                f"qos must be a QoSPolicy or None, got "
+                f"{type(qos).__name__}")
+        if qos is not None and qos.preempt and connector is None:
+            raise ValueError(
+                "QoSPolicy(preempt=True) needs a connector: preemptive "
+                "eviction PARKS the victim's carry (never drops it), so "
+                "the frontend must have somewhere to spill")
         self.server = server
         self.queue_capacity = int(queue_capacity)
         self.backpressure = backpressure
@@ -263,10 +294,18 @@ class AsyncSpikeFrontend:
         #: only — a breach fires the watchdog's callbacks (e.g. a
         #: flight-recorder dump), never touches admission.
         self.slo = slo
+        #: optional QoSPolicy: admission policy for the queue below.
+        #: None = plain FIFO (byte-identical to the pre-QoS frontend).
+        self.qos = qos
         self._spill_ns = f"spill-{next(_FRONTEND_IDS)}"
         self._lock = threading.RLock()
         self._rid = itertools.count()
-        self._queue: collections.deque[_Request] = collections.deque()
+        # QoS swaps the single FIFO deque for per-tenant queues under
+        # strict priority + DRR; both expose the same deque surface
+        # (len / iter / append / remove / index), only the admission
+        # pop differs (see pump step 2).
+        self._queue = (WeightedFairQueue(qos) if qos is not None
+                       else collections.deque())
         self._running: dict = {}      # server uid -> _Request
         # accounting — the sample buffers are bounded (rolling window of
         # the most recent entries) so a long-running front door cannot
@@ -278,6 +317,15 @@ class AsyncSpikeFrontend:
         self.total = collections.deque(maxlen=w)       # submit->done (s)
         self.depth_samples = collections.deque(maxlen=w)  # depth per pump
         self.rounds = 0
+        # per-class mirrors of the same accounting, zero-filled for
+        # every policy-declared class in metrics()["by_class"]
+        self.class_counts: dict[str, collections.Counter] = {}
+        self._class_lat: dict[str, dict[str, collections.deque]] = {}
+        # background pump driver (start()/stop()); _work wakes the loop
+        # out of its idle wait as soon as a submit/resume lands
+        self._pump_thread = None
+        self._stop_evt: threading.Event | None = None
+        self._work_evt: threading.Event | None = None
 
     # -- queries -----------------------------------------------------------
     @property
@@ -300,22 +348,47 @@ class AsyncSpikeFrontend:
     # -- telemetry ---------------------------------------------------------
     # Mirrors of the plain-dict accounting into the injected registry /
     # tracer. All no-ops when telemetry is off; never touch the server.
-    def _count(self, outcome: str, n: int = 1) -> None:
+    def _count(self, outcome: str, req: _Request | None = None,
+               n: int = 1) -> None:
         self.counts[outcome] += n
+        if req is not None:
+            self.class_counts.setdefault(
+                self._class_of(req), collections.Counter())[outcome] += n
         if self.registry is not None:
             self.registry.counter("snn_frontend_requests_total").labels(
                 outcome=outcome).inc(n)
+            if req is not None:
+                self.registry.counter(
+                    "snn_frontend_class_outcomes_total").labels(
+                    stream_class=self._class_of(req),
+                    outcome=outcome).inc(n)
 
     def _obs_depth(self) -> None:
         if self.registry is not None:
             self.registry.gauge("snn_frontend_queue_depth").set(
                 len(self._queue))
+            if self.qos is not None:
+                gauge = self.registry.gauge(
+                    "snn_frontend_class_queue_depth")
+                for cls, depth in self._queue.depth_by_class().items():
+                    gauge.labels(stream_class=cls).set(depth)
 
     @staticmethod
     def _class_of(req: _Request) -> str:
-        """Latency-histogram label: the view (model) name, or "default"
-        for raw server-wide requests."""
-        return req.view.name if req.view is not None else "default"
+        """Per-class accounting label: the tenant given at submit, else
+        the view (model) name, else "default" (set once at submission)."""
+        return req.tenant
+
+    def _lat(self, key: str, req: _Request, seconds: float) -> None:
+        """One latency sample: the global window, the per-class window,
+        and (when a registry is wired) the labelled histogram."""
+        getattr(self, key).append(seconds)
+        per = self._class_lat.setdefault(
+            self._class_of(req),
+            {k: collections.deque(maxlen=_METRICS_WINDOW)
+             for k in ("queue_wait", "service", "total")})
+        per[key].append(seconds)
+        self._obs_latency(f"snn_frontend_{key}_seconds", req, seconds)
 
     def _obs_latency(self, name: str, req: _Request,
                      seconds: float) -> None:
@@ -338,6 +411,7 @@ class AsyncSpikeFrontend:
 
     # -- submission --------------------------------------------------------
     def submit(self, chunk, *, view=None, deadline_ms: float | None = None,
+               tenant: str | None = None,
                events_capacity: int | None = None,
                events_policy: str = "error") -> RequestHandle:
         """Enqueue a request: the full ``(T, n_inputs)`` external spike
@@ -354,6 +428,10 @@ class AsyncSpikeFrontend:
             submission on the frontend clock. A request past its deadline
             is EXPIRED by the pump — refused if still queued, evicted
             mid-stream (slot carry zeroed, partial raster kept).
+          tenant: QoS class name (defaults to the view name, else
+            "default") — routes the request to its per-tenant queue
+            under a QoS policy and labels its per-class metrics either
+            way.
           events_capacity/events_policy: when set, the result also
             carries ``'events'`` — the output raster AER-encoded at this
             capacity (see :meth:`SpikeServer.feed_events`).
@@ -378,6 +456,8 @@ class AsyncSpikeFrontend:
             raise ValueError("request chunk must hold at least 1 timestep")
         if deadline_ms is None:
             deadline_ms = self.default_deadline_ms
+        if tenant is None:
+            tenant = view.name if view is not None else "default"
         with self._lock:
             now = self.clock()
             req = _Request(
@@ -385,19 +465,22 @@ class AsyncSpikeFrontend:
                 deadline=(None if deadline_ms is None
                           else now + deadline_ms / 1e3),
                 submitted_at=now,
+                tenant=str(tenant),
                 events_capacity=events_capacity,
                 events_policy=events_policy,
             )
-            self._count("submitted")
+            self._count("submitted", req)
             self._obs_event("queued", req, steps=req.steps_total,
                             stream_class=self._class_of(req))
             if not self._make_room():
                 req.state = "rejected"
-                self._count("rejected")
+                self._count("rejected", req)
                 self._obs_retired(req, "rejected")
                 return RequestHandle(self, req)
             self._queue.append(req)
             self._obs_depth()
+            if self._work_evt is not None:
+                self._work_evt.set()
             return RequestHandle(self, req)
 
     def submit_events(self, stream, **kwargs) -> RequestHandle:
@@ -428,7 +511,7 @@ class AsyncSpikeFrontend:
                     self.connector.evict(req.parked_key)
                     req.parked_key = None
                 req.state = "cancelled"
-                self._count("cancelled")
+                self._count("cancelled", req)
                 self._obs_retired(req, "cancelled")
                 self._obs_depth()
                 return True
@@ -437,15 +520,17 @@ class AsyncSpikeFrontend:
                 req.parked_key = None
                 req.state = "cancelled"
                 req.finished_at = self.clock()
-                self._count("cancelled")
+                self._count("cancelled", req)
                 self._obs_retired(req, "cancelled")
                 return True
             if req.state == "running":
                 self.server.detach(req.uid, reason="cancelled")
                 del self._running[req.uid]
+                if self.qos is not None:
+                    self._queue.note_released(req)
                 req.state = "cancelled"
                 req.finished_at = self.clock()
-                self._count("cancelled")
+                self._count("cancelled", req)
                 self._obs_retired(req, "cancelled")
                 return True
             return False
@@ -474,6 +559,8 @@ class AsyncSpikeFrontend:
                             stream_class=self._class_of(req),
                             resumed=True)
             self._obs_depth()
+            if self._work_evt is not None:
+                self._work_evt.set()
             return True
 
     def _make_room(self) -> bool:
@@ -484,10 +571,22 @@ class AsyncSpikeFrontend:
         if self.backpressure == "reject":
             return False
         if self.backpressure == "drop-oldest":
-            oldest = self._queue.popleft()
-            oldest.state = "dropped"
-            self._count("dropped")
-            self._obs_retired(oldest, "dropped")
+            # under QoS the shed victim is the lowest-priority class's
+            # oldest request, not the global head — load shedding should
+            # cost the least important tenant first
+            oldest = (self._queue.drop_victim() if self.qos is not None
+                      else self._queue.popleft())
+            if oldest.parked_key is not None:
+                # a resumed-but-not-yet-admitted request falls back to
+                # "parked": its carry is still in the connector and a
+                # later resume() may try again — shedding the queue
+                # place must not lose the stream's state
+                oldest.state = "parked"
+                self._obs_event("parked", oldest)
+            else:
+                oldest.state = "dropped"
+                self._obs_retired(oldest, "dropped")
+            self._count("dropped", oldest)
             return True
         while len(self._queue) >= self.queue_capacity:  # "block"
             progress = self.pump()
@@ -512,7 +611,7 @@ class AsyncSpikeFrontend:
         with self._lock:
             now = self.clock()
             summary = {"admitted": 0, "retired": 0, "expired": 0,
-                       "steps": 0}
+                       "evicted": 0, "steps": 0}
             # 1. deadline expiry — queued requests are refused outright
             # (a resumed one falls back to "parked": its carry is still
             # in the connector and a later resume() may try again)
@@ -524,9 +623,9 @@ class AsyncSpikeFrontend:
                     self._obs_event("parked", req)
                 else:
                     req.state = "expired"
-                    self._count("expired_queued")
+                    self._count("expired_queued", req)
                     self._obs_retired(req, "expired")
-                self._count("expired")
+                self._count("expired", req)
                 if self.slo is not None:
                     self.slo.record_miss()
                 summary["expired"] += 1
@@ -540,6 +639,8 @@ class AsyncSpikeFrontend:
                              if r.deadline is not None
                              and now > r.deadline]:
                 del self._running[uid]
+                if self.qos is not None:
+                    self._queue.note_released(req)
                 if self.connector is not None:
                     req.parked_key = (self._spill_ns, req.rid)
                     snap = self.server.snapshot_stream(uid)
@@ -547,30 +648,75 @@ class AsyncSpikeFrontend:
                     self.connector.insert(req.parked_key, snap)
                     req.uid = None
                     req.state = "parked"
-                    self._count("parked")
+                    self._count("parked", req)
                     self._obs_event("parked", req, steps_done=req.cursor)
                 else:
                     self.server.detach(uid, reason="expired")
                     req.state = "expired"
                     req.finished_at = now
-                    self._count("expired")
-                    self._count("expired_running")
+                    self._count("expired", req)
+                    self._count("expired_running", req)
                     self._obs_retired(req, "expired")
                 if self.slo is not None:
                     self.slo.record_miss()
                 summary["expired"] += 1
+            # 1b. SLO-aware preemption (QoS preempt only): every slot
+            # busy while an eligible queued request strictly outranks a
+            # running stream -> shed the lowest-priority running stream
+            # (newest first within it). The victim's carry is PARKED
+            # through the connector — never dropped — and it re-queues
+            # at the head of its class, continuing bit-clean once
+            # pressure clears. One eviction per round: takeover is
+            # gradual and the victim sequence stays a pure function of
+            # the op sequence.
+            if (self.qos is not None and self.qos.preempt
+                    and self._queue
+                    and self.server.scheduler.free_slots == 0):
+                top = self._queue.top_eligible_priority(now)
+                victim = (choose_victim(self.qos, self._running.values(),
+                                        below=top)
+                          if top is not None else None)
+                if victim is not None:
+                    uid = victim.uid
+                    del self._running[uid]
+                    self._queue.note_released(victim)
+                    victim.parked_key = (self._spill_ns, victim.rid)
+                    snap = self.server.snapshot_stream(uid)
+                    self.server.detach(uid, reason="parked")
+                    self.connector.insert(victim.parked_key, snap)
+                    victim.uid = None
+                    self._count("evicted", victim)
+                    self._count("parked", victim)
+                    self._obs_event("parked", victim,
+                                    steps_done=victim.cursor,
+                                    preempted=True)
+                    victim.state = "queued"
+                    self._queue.appendleft(victim)
+                    self._obs_event("queued", victim,
+                                    steps=victim.steps_total,
+                                    stream_class=self._class_of(victim),
+                                    resumed=True)
+                    summary["evicted"] += 1
             # 2. continuous-batching admission: queue head -> free slots
             # (a resumed request re-attaches FROM its parked carry — the
-            # only admission that does not power up from zero)
+            # only admission that does not power up from zero). Under
+            # QoS the "head" is whatever the policy grants next: strict
+            # priority, then DRR inside the stratum, quota and token
+            # gated — None when every queued class is blocked.
             while self._queue and self.server.scheduler.free_slots > 0:
-                req = self._queue.popleft()
+                if self.qos is not None:
+                    req = self._queue.pop_admissible(now)
+                    if req is None:
+                        break
+                else:
+                    req = self._queue.popleft()
                 resumed = req.parked_key is not None
                 if resumed:
                     snap = self.connector.select(req.parked_key)
                     req.uid = self.server.attach_stream(snap)
                     self.connector.evict(req.parked_key)
                     req.parked_key = None
-                    self._count("resumed")
+                    self._count("resumed", req)
                     self._obs_event("resumed", req, server_uid=req.uid)
                 else:
                     req.uid = self.server.attach()
@@ -580,9 +726,7 @@ class AsyncSpikeFrontend:
                 req.admitted_at = now
                 req.state = "running"
                 self._running[req.uid] = req
-                self.queue_wait.append(now - req.submitted_at)
-                self._obs_latency("snn_frontend_queue_wait_seconds",
-                                  req, now - req.submitted_at)
+                self._lat("queue_wait", req, now - req.submitted_at)
                 summary["admitted"] += 1
             # 3. one service quantum for every running stream, batched
             inputs = {}
@@ -603,16 +747,14 @@ class AsyncSpikeFrontend:
             for uid in [u for u, r in self._running.items()
                         if r.cursor >= r.steps_total]:
                 req = self._running.pop(uid)
+                if self.qos is not None:
+                    self._queue.note_released(req)
                 self.server.detach(uid, reason="done")
                 req.state = "done"
                 req.finished_at = now
-                self._count("done")
-                self.service.append(now - req.admitted_at)
-                self.total.append(now - req.submitted_at)
-                self._obs_latency("snn_frontend_service_seconds",
-                                  req, now - req.admitted_at)
-                self._obs_latency("snn_frontend_total_seconds",
-                                  req, now - req.submitted_at)
+                self._count("done", req)
+                self._lat("service", req, now - req.admitted_at)
+                self._lat("total", req, now - req.submitted_at)
                 self._obs_retired(req, "done")
                 if self.slo is not None:
                     self.slo.record_done(now - req.submitted_at)
@@ -627,6 +769,60 @@ class AsyncSpikeFrontend:
                 self.slo.check(now)
             summary["queue_depth"] = len(self._queue)
             return summary
+
+    # -- background driver -------------------------------------------------
+    def start(self, poll_interval_s: float = 0.001) -> None:
+        """Run the pump loop on a daemon thread: the real multi-threaded
+        driver. Submitters on any thread call :meth:`submit` as usual —
+        the queue, counters, and server access all serialize on the
+        frontend lock, and each submit wakes the loop out of its idle
+        wait. Rounds interleave with submissions on the thread
+        scheduler's clock, so threaded runs trade the *replayable* op
+        sequence for liveness — accounting invariants (no lost or
+        duplicated handles, exact outcome counts) still hold, pinned by
+        the stress test in tests/test_serving_qos.py."""
+        with self._lock:
+            if self._pump_thread is not None:
+                raise RuntimeError("pump thread already running")
+            self._stop_evt = threading.Event()
+            self._work_evt = threading.Event()
+            self._pump_thread = threading.Thread(
+                target=self._pump_loop, args=(poll_interval_s,),
+                name=f"frontend-pump-{self._spill_ns}", daemon=True)
+        self._pump_thread.start()
+
+    def _pump_loop(self, poll_interval_s: float) -> None:
+        while not self._stop_evt.is_set():
+            if self.idle:
+                self._work_evt.wait(poll_interval_s)
+                self._work_evt.clear()
+                continue
+            self.pump()
+
+    def stop(self, drain: bool = True,
+             timeout_s: float | None = 30.0) -> None:
+        """Stop the background driver. ``drain=True`` (default) waits
+        until the frontend is idle first so no accepted request is left
+        behind; the thread itself is then joined."""
+        thread = self._pump_thread
+        if thread is None:
+            return
+        if drain:
+            deadline = (None if timeout_s is None
+                        else time.monotonic() + timeout_s)
+            while not self.idle:
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError(
+                        "frontend did not drain before stop() timeout")
+                time.sleep(0.001)
+        self._stop_evt.set()
+        self._work_evt.set()
+        thread.join(timeout_s)
+        if thread.is_alive():
+            raise TimeoutError("pump thread did not stop")
+        self._pump_thread = None
+        self._work_evt = None
+        self._stop_evt = None
 
     def drain(self, max_rounds: int | None = None) -> dict:
         """Pump until idle (or ``max_rounds``); returns :meth:`metrics`.
@@ -651,15 +847,36 @@ class AsyncSpikeFrontend:
         every other key is always present — an empty or all-expired run
         returns the same structure as a busy one, so callers index
         without existence checks. Percentile fields are None (not
-        missing) when no sample exists."""
+        missing) when no sample exists. ``by_class`` applies the same
+        contract per tenant class: every class a QoS policy declares OR
+        traffic has touched appears with the full zero-filled
+        ``counts`` and all-None-able latency percentiles (an empty
+        QoS-less run yields ``{}``)."""
         with self._lock:
             depth = np.asarray(self.depth_samples or [0])
             counts = {k: int(self.counts.get(k, 0)) for k in OUTCOME_KEYS}
             # ad-hoc outcomes (none today) must never be silently dropped
             counts.update({k: int(v) for k, v in self.counts.items()
                            if k not in counts})
+            classes = set(self.class_counts) | set(self._class_lat)
+            if self.qos is not None:
+                classes |= set(self.qos.classes)
+            by_class = {}
+            for cls in sorted(classes):
+                cc = self.class_counts.get(cls, {})
+                lat = self._class_lat.get(cls, {})
+                by_class[cls] = {
+                    "counts": {k: int(cc.get(k, 0))
+                               for k in OUTCOME_KEYS},
+                    "queue_wait": latency_percentiles(
+                        lat.get("queue_wait", ())),
+                    "service": latency_percentiles(
+                        lat.get("service", ())),
+                    "total": latency_percentiles(lat.get("total", ())),
+                }
             return {
                 "counts": counts,
+                "by_class": by_class,
                 "queue_wait": latency_percentiles(self.queue_wait),
                 "service": latency_percentiles(self.service),
                 "total": latency_percentiles(self.total),

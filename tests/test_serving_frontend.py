@@ -575,8 +575,10 @@ def test_model_stream_submit_requires_frontend(rng):
 
 def test_latency_percentiles_shapes():
     assert latency_percentiles([])["p50"] is None
+    assert latency_percentiles([])["p99"] is None
     p = latency_percentiles([1.0, 2.0, 3.0])
     assert p["p50"] == 2.0 and p["max"] == 3.0
+    assert p["p95"] <= p["p99"] <= p["max"]
 
 
 # --------------------------------------------------------------------------
@@ -592,14 +594,40 @@ def test_metrics_shape_on_empty_run(rng):
     server = SpikeServer(engine, n_slots=1, chunk_steps=2)
     fe = AsyncSpikeFrontend(server, queue_capacity=1)
     m = fe.metrics()
-    assert set(m) == {"counts", "queue_wait", "service", "total",
-                      "queue_depth", "rounds"}
+    assert set(m) == {"counts", "by_class", "queue_wait", "service",
+                      "total", "queue_depth", "rounds"}
     assert m["counts"] == {k: 0 for k in OUTCOME_KEYS}
+    # no QoS policy + no traffic = no classes to zero-fill
+    assert m["by_class"] == {}
     for section in ("queue_wait", "service", "total"):
         assert m[section] == {"mean": None, "p50": None, "p95": None,
-                              "max": None}
+                              "p99": None, "max": None}
     assert m["queue_depth"] == {"max": 0, "mean": 0.0}
     assert m["rounds"] == 0
+
+
+def test_metrics_by_class_zero_filled_on_empty_qos_run(rng):
+    """A QoS frontend that never saw a request still reports every
+    policy-declared class with the FULL zero-filled outcome dict and
+    all-None percentiles — dashboards index per-class keys without
+    existence checks (the PR 8 contract, extended per class)."""
+    from repro.serving.frontend import OUTCOME_KEYS
+    from repro.serving.qos import QoSClass, QoSPolicy
+
+    engine = _engine(rng)
+    server = SpikeServer(engine, n_slots=1, chunk_steps=2)
+    policy = QoSPolicy(classes={"hi": QoSClass(priority=1),
+                                "bg": QoSClass()})
+    fe = AsyncSpikeFrontend(server, queue_capacity=1, qos=policy)
+    m = fe.metrics()
+    assert set(m["by_class"]) == {"hi", "bg"}
+    for cls in ("hi", "bg"):
+        per = m["by_class"][cls]
+        assert set(per) == {"counts", "queue_wait", "service", "total"}
+        assert per["counts"] == {k: 0 for k in OUTCOME_KEYS}
+        for section in ("queue_wait", "service", "total"):
+            assert per[section]["p50"] is None
+            assert per[section]["p99"] is None
 
 
 def test_metrics_shape_on_all_expired_run(rng):
@@ -623,6 +651,13 @@ def test_metrics_shape_on_all_expired_run(rng):
     assert m["counts"]["expired_queued"] == 2
     assert m["service"]["p50"] is None and m["total"]["p50"] is None
     assert m["rounds"] == 1
+    # per-class mirror: the traffic's class appears zero-filled for
+    # every outcome it never reached, latencies all-None
+    assert set(m["by_class"]) == {"default"}
+    per = m["by_class"]["default"]
+    assert set(per["counts"]) == set(OUTCOME_KEYS)
+    assert per["counts"]["expired"] == 2 and per["counts"]["done"] == 0
+    assert per["total"]["p50"] is None
 
 
 def test_traced_spill_flow_reconstructs_violation_free(rng):
